@@ -1,0 +1,61 @@
+"""Paper Figure 2: TTFT/TPS/E2EL speedups vs the llama.cpp-baseline
+(static -ngl layer partitioning found by budget search).
+
+Paper bands: TTFT avg 2x (max 6.7x); TPS avg 3.7x (max ~30x); E2EL avg 2x
+(max 4.3x). We report our measured-model speedups against the same kind of
+baseline and check the *trends* (speedups > 1, larger at low budgets/long
+contexts for TPS).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import CLI3, InferenceSetting, TimingEstimator
+
+from benchmarks.common import (baseline_metrics, e2el, get_db, graph_for,
+                               llamacpp_baseline_plan, ours_metrics, write_csv)
+
+MODELS = ("nemo8b", "yi-9b", "qwen30b-a3b", "qwen3-moe-235b-a22b")
+BUDGETS_G = (2, 4, 6, 8, 12, 16, 24, 32)
+CTXS = (1024, 4096, 16384, 65536)
+
+
+def run(verbose=True):
+    db = get_db("cli3")
+    rows = []
+    sp = {"ttft": [], "tps": [], "e2el": []}
+    for arch in MODELS:
+        cfg = get_config(arch)
+        subs = graph_for(cfg, arch)
+        for ctx in CTXS:
+            setting = InferenceSetting(batch=1, context=ctx)
+            for bg in BUDGETS_G:
+                est = TimingEstimator(db, CLI3)
+                b_ttft, b_tps = baseline_metrics(
+                    llamacpp_baseline_plan, subs, int(bg * 1e9), setting, est,
+                    isl=ctx)
+                o_ttft, o_tps, _ = ours_metrics(subs, int(bg * 1e9), setting,
+                                                est, isl=ctx)
+                s_ttft = b_ttft / max(o_ttft, 1e-12)
+                s_tps = o_tps / max(b_tps, 1e-12)
+                s_e2el = e2el(b_ttft, b_tps) / max(e2el(o_ttft, o_tps), 1e-12)
+                rows.append([arch, ctx, bg, round(s_ttft, 2), round(s_tps, 2),
+                             round(s_e2el, 2)])
+                sp["ttft"].append(s_ttft)
+                sp["tps"].append(s_tps)
+                sp["e2el"].append(s_e2el)
+    path = write_csv("figure2.csv", rows,
+                     ["model", "ctx", "budget_G", "ttft_speedup",
+                      "tps_speedup", "e2el_speedup"])
+    if verbose:
+        print(f"figure2: {len(rows)} cells -> {path}")
+        for k, v in sp.items():
+            a = np.array(v)
+            print(f"figure2,{k}_speedup,avg={a.mean():.2f},max={a.max():.2f},"
+                  f"frac>=1={np.mean(a >= 0.99):.2f}")
+    return rows, sp
+
+
+if __name__ == "__main__":
+    run()

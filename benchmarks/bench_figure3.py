@@ -1,0 +1,53 @@
+"""Paper Figure 3: pipelined sharding vs llama.cpp manual offloading knobs
+(-cmoe: MoE FFNs to CPU; -kvo: KV cache to CPU) for qwen30b on cli3."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import CLI3, InferenceSetting, TimingEstimator
+
+from benchmarks.common import (baseline_metrics, get_db, graph_for,
+                               manual_offload_plan, ours_metrics, write_csv)
+
+BUDGETS_G = (2, 8, 32)
+CTXS = (1024, 4096, 16384, 65536)
+
+
+def run(verbose=True):
+    db = get_db("cli3")
+    cfg = get_config("qwen30b-a3b")
+    subs = graph_for(cfg, "qwen30b-a3b")
+    rows = []
+    wins = {"cmoe": 0, "cmoe_kvo": 0, "total": 0}
+    for ctx in CTXS:
+        setting = InferenceSetting(batch=1, context=ctx)
+        for bg in BUDGETS_G:
+            est = TimingEstimator(db, CLI3)
+            o_ttft, o_tps, _ = ours_metrics(subs, int(bg * 1e9), setting, est,
+                                            isl=ctx)
+            for name, kw in (("cmoe", dict(cmoe=True)),
+                             ("cmoe_kvo", dict(cmoe=True, kvo=True))):
+                def plan_fn(s, b, st, kw=kw):
+                    return manual_offload_plan(s, b, st, **kw)
+                b_ttft, b_tps = baseline_metrics(plan_fn, subs, int(bg * 1e9),
+                                                 setting, est, isl=ctx)
+                s_ttft = b_ttft / max(o_ttft, 1e-12)
+                s_tps = o_tps / max(b_tps, 1e-12)
+                rows.append([ctx, bg, name, round(s_ttft, 2), round(s_tps, 2)])
+                wins[name] += (s_tps >= 0.99) and (s_ttft >= 0.99)
+            wins["total"] += 1
+    path = write_csv("figure3.csv", rows,
+                     ["ctx", "budget_G", "baseline", "ttft_speedup",
+                      "tps_speedup"])
+    if verbose:
+        arr = np.array([r[4] for r in rows])
+        print(f"figure3: {len(rows)} cells -> {path}")
+        print(f"figure3,tps_speedup,avg={arr.mean():.2f},max={arr.max():.2f}")
+        print(f"figure3,win_fracs,cmoe={wins['cmoe']/wins['total']:.2f},"
+              f"cmoe_kvo={wins['cmoe_kvo']/wins['total']:.2f}")
+    return rows, wins
+
+
+if __name__ == "__main__":
+    run()

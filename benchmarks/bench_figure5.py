@@ -1,0 +1,47 @@
+"""Paper Figure 5: sensitivity to CPU thread count and link bandwidth
+(PCIe gen3 16GB/s -> gen5 64GB/s) at 8G budget, 16K context."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import CLI3, InferenceSetting, TimingEstimator
+
+from benchmarks.common import get_db, graph_for, ours_metrics, write_csv
+
+CTX = 16384
+BUDGET = int(8e9)
+
+
+def run(verbose=True):
+    db = get_db("cli3")
+    rows = []
+    setting = InferenceSetting(batch=1, context=CTX)
+    for arch in ("nemo8b", "qwen30b-a3b"):
+        cfg = get_config(arch)
+        subs = graph_for(cfg, arch)
+        tps_by_threads = []
+        for threads in (1, 2, 4, 8, 16):
+            est = TimingEstimator(db, CLI3, threads=threads)
+            ttft, tps, _ = ours_metrics(subs, BUDGET, setting, est, isl=CTX)
+            rows.append([arch, f"threads={threads}", round(tps, 2),
+                         round(ttft, 3)])
+            tps_by_threads.append(tps)
+        for link in (16.0, 32.0, 64.0):
+            sysc = CLI3.with_(link_gbps=link)
+            est = TimingEstimator(db, sysc)
+            ttft, tps, _ = ours_metrics(subs, BUDGET, setting, est, isl=CTX)
+            rows.append([arch, f"link={int(link)}GBps", round(tps, 2),
+                         round(ttft, 3)])
+        if verbose:
+            mono = all(b >= a * 0.98 for a, b in
+                       zip(tps_by_threads, tps_by_threads[1:]))
+            print(f"figure5,{arch},tps_1t={tps_by_threads[0]:.1f},"
+                  f"tps_16t={tps_by_threads[-1]:.1f},thread_monotone={mono}")
+    path = write_csv("figure5.csv", rows, ["model", "condition", "TPS",
+                                           "TTFT_s"])
+    if verbose:
+        print(f"figure5: {len(rows)} rows -> {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Paper Figure 6: LLM TPS vs concurrent GPU application (video game) FPS
+across LLM VRAM budgets — the pareto sweet spot.
+
+Model: the game needs G_assets bytes resident; whatever spills to sysRAM is
+re-streamed per frame over the link, inflating frame time. Slow frames
+preempt the LLM poorly, scaling its effective GPU throughput down (the
+paper's observed mechanism). Sweeping the LLM budget reproduces the
+paper's pareto shape: both curves high at an intermediate budget.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import CLI2, InferenceSetting, TimingEstimator
+
+from benchmarks.common import get_db, graph_for, ours_metrics, write_csv
+
+GAME_ASSETS_GB = 10.0
+BASE_FPS = 120.0
+TOTAL_VRAM_GB = 16.0  # cli2
+
+
+def game_fps(llm_budget_gb):
+    free = max(TOTAL_VRAM_GB - llm_budget_gb, 0.0)
+    spill = max(GAME_ASSETS_GB - free, 0.0) * 1e9
+    # frame time = base + re-stream of spilled assets' hot fraction
+    frame_s = 1.0 / BASE_FPS + 0.15 * spill / (CLI2.link_gbps * 1e9)
+    return 1.0 / frame_s
+
+
+def llm_preemption_factor(fps):
+    """Slow frames hold the GPU longer -> the LLM gets fewer cycles."""
+    return min(1.0, fps / BASE_FPS) ** 1.5
+
+
+def run(verbose=True):
+    db = get_db("cli2")
+    cfg = get_config("qwen30b-a3b")
+    subs = graph_for(cfg, "qwen30b-a3b")
+    setting = InferenceSetting(batch=1, context=4096)
+    rows = []
+    best = (None, -1.0)
+    for bg in (1, 2, 3, 4, 6, 8, 10, 12, 14):
+        est = TimingEstimator(db, CLI2)
+        _, tps, _ = ours_metrics(subs, int(bg * 1e9), setting, est, isl=4096)
+        fps = game_fps(bg)
+        tps_eff = tps * llm_preemption_factor(fps)
+        rows.append([bg, round(tps_eff, 1), round(fps, 1)])
+        # pareto score: both normalized
+        score = (tps_eff / 60.0) * (fps / BASE_FPS)
+        if score > best[1]:
+            best = (bg, score)
+    path = write_csv("figure6.csv", rows, ["llm_budget_G", "llm_TPS",
+                                           "game_FPS"])
+    if verbose:
+        print(f"figure6: {len(rows)} budgets -> {path}")
+        print(f"figure6,pareto_budget_G,{best[0]}")
+        lo, hi = rows[0], rows[-1]
+        print(f"figure6,endpoints,budget={lo[0]}G tps={lo[1]} fps={lo[2]} | "
+              f"budget={hi[0]}G tps={hi[1]} fps={hi[2]}")
+        mid = [r for r in rows if r[0] == best[0]][0]
+        print(f"figure6,sweet_spot,budget={mid[0]}G tps={mid[1]} fps={mid[2]}")
+    return rows, best
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""Paper §7 "Profiler effectiveness": oracle comparison.
+
+The paper measures all three strategies on real hardware for 105 configs and
+finds the planner picks the optimum 100% of the time even with ~10% median
+latency error. Without hardware, we model ground truth as the same
+estimator driven by a *perturbed* profile DB (10% lognormal noise per entry
+— the paper's observed estimation error). The planner (clean DB) picks; the
+perturbed "reality" ranks; we report selection agreement, median latency
+error, and the strategy-win distribution."""
+from __future__ import annotations
+
+import copy
+import math
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import CLI3, InferenceSetting, TimingEstimator
+from repro.core.planner import (plan_dynamic, plan_gpu_only, plan_static,
+                                decide_scratch_budget, pin_by_priority)
+
+from benchmarks.common import get_db, graph_for, write_csv
+
+
+def perturb(db, seed, sigma=0.10):
+    """Systematic per-(engine, op) noise: whole-schedule errors do not
+    average out across kernels of the same op (matches the paper's ~10%
+    median schedule-latency error regime)."""
+    rng = np.random.RandomState(seed)
+    db2 = copy.deepcopy(db)
+    factors = {}
+    for k, entries in db2.entries.items():
+        fk = (k[0], k[1])
+        if fk not in factors:
+            factors[fk] = (float(rng.lognormal(0.0, sigma)),
+                           float(rng.lognormal(0.0, sigma)))
+        ff, fb = factors[fk]
+        for e in entries:
+            e.gflops *= ff
+            e.gbps *= fb
+    return db2
+
+
+def run(verbose=True, sigma=0.10):
+    db = get_db("cli3")
+    truth_db = perturb(db, seed=7, sigma=sigma)
+    rows = []
+    agree = 0
+    errors = []
+    wins = {"gpu-only": 0, "static": 0, "dynamic": 0}
+    configs = []
+    for arch in ("nemo8b", "qwen30b-a3b"):
+        for link in (16.0, 64.0):
+            for threads in (1, 16):
+                for ctx in (4096, 16384):
+                    for bg in (2, 3, 4, 6, 8, 12, 16):
+                        configs.append((arch, link, threads, ctx, bg))
+    for arch, link, threads, ctx, bg in configs:
+        cfg = get_config(arch)
+        subs = graph_for(cfg, arch)
+        sysc = CLI3.with_(link_gbps=link)
+        setting = InferenceSetting(batch=1, context=ctx)
+        tier = 1  # decode-phase strategy selection (paper measures TPS)
+        budget = int(bg * 1e9)
+        scratch = decide_scratch_budget(budget, subs, setting, tier)
+        pinned, _ = pin_by_priority(budget - scratch, subs, setting)
+        est = TimingEstimator(db, sysc, threads=threads)
+        oracle = TimingEstimator(truth_db, sysc, threads=threads)
+        plans = [plan_gpu_only(subs, pinned), plan_static(subs, pinned),
+                 plan_dynamic(subs, pinned, est, tier, setting)]
+        est_times = [est.plan_time(p, tier, setting) for p in plans]
+        true_times = [oracle.plan_time(p, tier, setting) for p in plans]
+        pick = int(np.argmin(est_times))
+        best = int(np.argmin(true_times))
+        agree += pick == best
+        errors.append(abs(est_times[pick] - true_times[pick])
+                      / max(true_times[pick], 1e-12))
+        wins[plans[best].name] += 1
+        rows.append([arch, link, threads, ctx, bg, plans[pick].name,
+                     plans[best].name, pick == best])
+    n = len(configs)
+    path = write_csv("oracle.csv", rows,
+                     ["model", "link_GBps", "threads", "ctx", "budget_G",
+                      "picked", "oracle_best", "agree"])
+    if verbose:
+        print(f"oracle: {n} configs -> {path}")
+        print(f"oracle,selection_agreement,{agree}/{n}={agree/n:.3f}")
+        print(f"oracle,median_latency_error,{np.median(errors):.3f}")
+        print(f"oracle,strategy_wins,{wins}")
+    return agree / n, np.median(errors), wins
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper Table 5: best TPS/TTFT at peak VRAM budgets on cli2 (16G) and
+cli1 (12G), incl. the qwen235b-OOM-on-cli1 reproduction (64+13 GB working
+set > cli1's 64 GB sysRAM violates the paper's minimum-requirements rule)."""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core import CLI1, CLI2, InferenceSetting, TimingEstimator
+
+from benchmarks.common import WDTYPE, get_db, graph_for, ours_metrics, write_csv
+
+CTXS = (1024, 4096, 16384, 65536)
+PEAK = {"cli1": 12, "cli2": 16}
+SYSRAM_GB = {"cli1": 64, "cli2": 128}
+
+
+def run(verbose=True):
+    rows = []
+    for sys_name, sysc in (("cli2", CLI2), ("cli1", CLI1)):
+        db = get_db(sys_name)
+        for arch in ("nemo8b", "qwen30b-a3b", "qwen3-moe-235b-a22b"):
+            cfg = get_config(arch)
+            subs = graph_for(cfg, arch)
+            disk_gb = sum(s.weight_bytes for s in subs) / 1e9
+            if disk_gb + 13 > SYSRAM_GB[sys_name]:
+                rows.append([sys_name, arch, "-", "OOM", "OOM"])
+                continue
+            for ctx in CTXS:
+                setting = InferenceSetting(batch=1, context=ctx)
+                est = TimingEstimator(db, sysc)
+                ttft, tps, _ = ours_metrics(subs, int(PEAK[sys_name] * 1e9),
+                                            setting, est, isl=ctx)
+                rows.append([sys_name, arch, ctx, round(tps, 1),
+                             round(ttft, 2)])
+    path = write_csv("table5.csv", rows,
+                     ["system", "model", "ctx", "TPS", "TTFT_s"])
+    if verbose:
+        print(f"table5: {len(rows)} rows -> {path}")
+        oom = [r for r in rows if r[3] == "OOM"]
+        print(f"table5,qwen235b_oom_on_cli1,{bool(oom)} "
+              f"(paper: OUT OF MEMORY on cli1)")
+        c2 = {(r[1], r[2]): r[3] for r in rows if r[0] == 'cli2'}
+        print(f"table5,cli2_nemo8b_1K,{c2.get(('nemo8b', 1024))} (paper 22.9)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

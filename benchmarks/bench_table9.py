@@ -1,0 +1,55 @@
+"""Paper Table 9 / Figure 7: batched-mode TPS across batch sizes, context
+sizes and budgets; batch-wide speedups vs the llama.cpp baseline."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import CLI3, InferenceSetting, TimingEstimator
+
+from benchmarks.common import (baseline_metrics, get_db, graph_for,
+                               llamacpp_baseline_plan, ours_metrics, write_csv)
+
+BATCHES = (1, 4, 16, 64)
+CTXS = (1024, 4096)
+BUDGETS_G = (4, 8, 16)
+
+
+def run(verbose=True):
+    db = get_db("cli3")
+    rows = []
+    speedups = []
+    for arch in ("nemo8b", "qwen30b-a3b"):
+        cfg = get_config(arch)
+        subs = graph_for(cfg, arch)
+        for ctx in CTXS:
+            for bg in BUDGETS_G:
+                scale = []
+                for bs in BATCHES:
+                    setting = InferenceSetting(batch=bs, context=ctx)
+                    est = TimingEstimator(db, CLI3)
+                    _, tps, _ = ours_metrics(subs, int(bg * 1e9), setting,
+                                             est, isl=ctx)
+                    _, b_tps = baseline_metrics(
+                        llamacpp_baseline_plan, subs, int(bg * 1e9), setting,
+                        est, isl=ctx)
+                    sp = tps / max(b_tps, 1e-12)
+                    rows.append([arch, ctx, bg, bs, round(tps, 1),
+                                 round(sp, 2)])
+                    speedups.append(sp)
+                    scale.append(tps)
+                if verbose and bg == 8:
+                    print(f"table9,{arch},ctx={ctx},budget=8G,"
+                          f"tps_by_batch={[round(t,1) for t in scale]}")
+    path = write_csv("table9.csv", rows,
+                     ["model", "ctx", "budget_G", "batch", "batch_TPS",
+                      "speedup_vs_baseline"])
+    if verbose:
+        a = np.array(speedups)
+        print(f"table9: {len(rows)} cells -> {path}")
+        print(f"figure7,batch_speedup,avg={a.mean():.2f},max={a.max():.2f}")
+    return rows, speedups
+
+
+if __name__ == "__main__":
+    run()

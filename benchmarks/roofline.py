@@ -1,0 +1,171 @@
+"""Roofline analysis per (arch x shape) on the single-pod 16x16 mesh.
+
+Three terms from the dry-run + per-layer probe artifacts (DESIGN.md §4):
+
+    compute_t    = HLO_FLOPs_per_chip / 197 TFLOP/s
+    memory_t     = HLO_bytes_per_chip / 819 GB/s
+    collective_t = per-chip ICI traffic / 50 GB/s/link
+
+plus MODEL_FLOPS (analytic 6*N_active*D or 2*N_active*D + attention) and the
+MODEL/HLO ratio that exposes remat/replication waste. The perf loop
+(EXPERIMENTS.md §Perf) iterates on whatever dominates.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.config import SHAPES, cells
+from repro.configs import get_config
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+PROBE_DIR = os.path.join(RESULTS, "probe")
+DRYRUN_DIR = os.path.join(RESULTS, "dryrun")
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # B/s
+ICI_BW = 50e9           # B/s/link
+CHIPS = 256
+
+
+def active_param_count(cfg) -> float:
+    if cfg.moe is None:
+        return float(cfg.param_count())
+    m = cfg.moe
+    expert = cfg.n_layers * m.n_experts * 3 * cfg.d_model * m.d_expert
+    active = cfg.n_layers * m.top_k * 3 * cfg.d_model * m.d_expert
+    return float(cfg.param_count() - expert + active)
+
+
+def n_attn_layers(cfg) -> int:
+    if cfg.family == "hybrid":
+        return cfg.n_layers // max(cfg.shared_attn_every, 1)
+    if cfg.family == "ssm":
+        return 0
+    return cfg.n_layers
+
+
+def model_flops_per_chip(cfg, shape, chips=CHIPS) -> float:
+    gb, T = shape.global_batch, shape.seq_len
+    hd, H = cfg.resolved_head_dim, cfg.n_heads
+    if shape.kind == "decode":
+        tokens = gb
+        attn = n_attn_layers(cfg) * gb * 2 * 2 * T * H * hd
+        mult = 2
+    else:
+        tokens = gb * T
+        attn = n_attn_layers(cfg) * gb * 2 * T * T * H * hd  # causal ~T^2/2 x2 matmuls x2 flops
+        mult = 6 if shape.kind == "train" else 2
+        if shape.kind == "train":
+            attn *= 3  # fwd + bwd
+    return (mult * active_param_count(cfg) * tokens + attn) / chips
+
+
+def load_cell(arch, shape_name):
+    probe_fn = os.path.join(PROBE_DIR, f"{arch}__{shape_name}.json")
+    dry_fn = os.path.join(DRYRUN_DIR, f"16x16__{arch}__{shape_name}.json")
+    probe = json.load(open(probe_fn)) if os.path.exists(probe_fn) else None
+    dry = json.load(open(dry_fn)) if os.path.exists(dry_fn) else None
+    return probe, dry
+
+
+def activation_traffic(cfg, shape, chips=CHIPS) -> float:
+    """Analytic per-chip HBM activation traffic for fwd(+bwd w/ remat):
+    ~6 residual-width passes per layer (read+write fwd, recompute, bwd)."""
+    if shape.kind == "decode":
+        return 0.0
+    tokens_chip = shape.global_batch * shape.seq_len / chips
+    passes = 6 if shape.kind == "train" else 2
+    return cfg.n_layers * tokens_chip * cfg.d_model * 2 * passes
+
+
+def hbm_traffic(cfg, shape, dry) -> float:
+    """Per-chip compulsory HBM traffic from the compiled dry-run: arguments
+    read + non-aliased outputs written, plus modeled activation streaming
+    for train/prefill. Donated-and-aliased outputs are updated in place —
+    for decode that's a one-token KV write, not a full-cache rewrite; for
+    train the params/opt ARE fully rewritten, so aliased bytes count. The
+    raw XLA-CPU 'bytes accessed' (reported as hlo_bytes_unfused_s) counts
+    every unfused temp and over-states a fused TPU lowering ~10-30x."""
+    m = dry["memory"]
+    out = m["argument_bytes"] + m["output_bytes"] - m["alias_bytes"]
+    if shape.kind == "train":
+        out += m["alias_bytes"]
+    return out + activation_traffic(cfg, shape)
+
+
+def analyze_cell(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    probe, dry = load_cell(arch, shape_name)
+    if probe is None or dry is None:
+        return None
+    flops, bytes_, coll = probe["flops"], probe["bytes"], probe["coll"]
+    mem_bytes = hbm_traffic(cfg, shape, dry)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": mem_bytes / HBM_BW,
+        "collective_s": coll / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    bound = terms[dom]
+    mf = model_flops_per_chip(cfg, shape)
+    row = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        **{k: v for k, v in terms.items()},
+        "dominant": dom.replace("_s", ""),
+        "roofline_fraction": (mf / PEAK_FLOPS) / max(bound, 1e-15),
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_unfused_s": bytes_ / HBM_BW,  # diagnostic upper bound
+        "model_over_hlo": mf / max(flops, 1e-9),
+        "mem_per_chip_GB": (dry["memory"]["per_chip_peak_bytes"] / 1e9
+                            if dry else None),
+    }
+    return row
+
+
+def run(verbose=True):
+    rows = []
+    for arch, shape_name in cells():
+        r = analyze_cell(arch, shape_name)
+        if r is None:
+            if verbose:
+                print(f"roofline,MISSING_PROBE,{arch},{shape_name}")
+            continue
+        rows.append(r)
+    if not rows:
+        return rows
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "roofline.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    # markdown table for EXPERIMENTS.md
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| roofline frac | MODEL/HLO | mem GB/chip |")
+    lines = [hdr, "|" + "---|" * 9]
+    for r in sorted(rows, key=lambda x: x["roofline_fraction"]):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} "
+            f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+            f"| {r['dominant']} | {r['roofline_fraction']:.3f} "
+            f"| {r['model_over_hlo']:.2f} "
+            f"| {r['mem_per_chip_GB'] if r['mem_per_chip_GB'] is None else round(r['mem_per_chip_GB'],1)} |")
+    with open(os.path.join(RESULTS, "roofline.md"), "w") as f:
+        f.write("\n".join(lines) + "\n")
+    if verbose:
+        doms = {}
+        for r in rows:
+            doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+        print(f"roofline: {len(rows)} cells; dominant terms: {doms}")
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        most_coll = max(rows, key=lambda r: r["collective_s"]
+                        / max(max(r["compute_s"], r["memory_s"]), 1e-15))
+        print(f"roofline,worst_fraction,{worst['arch']},{worst['shape']},"
+              f"{worst['roofline_fraction']:.3f}")
+        print(f"roofline,most_collective_bound,{most_coll['arch']},"
+              f"{most_coll['shape']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+# One function per paper table. Prints ``name,metric,value`` CSV lines.
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table4     # one artifact
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (bench_figure2, bench_figure3, bench_figure4,
+                        bench_figure5, bench_figure6, bench_oracle,
+                        bench_table4, bench_table5, bench_table8,
+                        bench_table9, roofline)
+
+SUITES = {
+    "table4": bench_table4.run,
+    "table5": bench_table5.run,
+    "figure2": bench_figure2.run,
+    "figure3": bench_figure3.run,
+    "figure4": bench_figure4.run,
+    "figure5": bench_figure5.run,
+    "figure6": bench_figure6.run,
+    "table8": bench_table8.run,
+    "table9": bench_table9.run,
+    "oracle": bench_oracle.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(SUITES)
+    for name in names:
+        t0 = time.time()
+        print(f"=== {name} ===")
+        SUITES[name]()
+        print(f"{name},seconds,{time.time()-t0:.1f}")
+    print("benchmarks,done,ok")
+
+
+if __name__ == "__main__":
+    main()

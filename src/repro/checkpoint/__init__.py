@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import (  # noqa: F401
+    CheckpointManager, load_checkpoint, save_checkpoint)

@@ -1,0 +1,141 @@
+"""Profile-driven roofline timing estimator (paper §4, "Profiler-based
+timing estimation for schedule plans").
+
+For every kernel of every sub-layer: exact profile match -> achieved FLOPS;
+partial match -> nearest neighbour + roofline classification (compute-bound:
+flops/FLOPS_roofline; memory-bound: bytes/bandwidth); no match -> skipped.
+
+Plan time uses the pipelined copy-compute recurrence:
+    link_done[j] = link_done[j-1] + transfer[j]
+    ready[j]     = max(finish[j-1], link_done[j])
+    finish[j]    = ready[j] + compute[j]
+i.e. transfers for shard j overlap earlier shards' compute (the paper's VRAM
+scratch double-buffer), and the serial dependency chain is respected.
+
+CPU/link contention: when a plan keeps the link busy a significant fraction
+of the pass, CPU kernels are costed with the pcie_active profile entries
+(the paper's contention-aware measurements).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.core.profile_db import ProfileDB
+from repro.core.sublayer import SubLayer
+from repro.core.system import InferenceSetting, SystemConfig
+
+
+@dataclass
+class Placement:
+    sub: SubLayer
+    residency: str   # "vram" | "sysram"
+    engine: str      # "gpu" | "cpu"
+    streamed: bool = False  # weights copied just-in-time to VRAM scratch
+
+    def short(self):
+        return f"{self.sub.name}:{self.residency[0]}{self.engine[0]}" \
+               f"{'s' if self.streamed else ''}"
+
+
+@dataclass
+class Plan:
+    name: str
+    placements: List[Placement]
+    est_time: float = 0.0
+    detail: dict = field(default_factory=dict)
+
+
+class TimingEstimator:
+    def __init__(self, db: ProfileDB, system: SystemConfig,
+                 threads: Optional[int] = None):
+        self.db = db
+        self.sys = system
+        self.threads = threads if threads is not None else system.cpu_threads
+        self.match_stats = {"exact": 0, "partial": 0, "skipped": 0}
+
+    # ------------------------------------------------------------ kernels
+    def kernel_time(self, engine: str, kern, pcie_active: bool = False) -> float:
+        th = self.threads if engine == "cpu" else 0
+        hit = self.db.lookup(engine, kern.op, kern.dtype_bytes, th, kern.dims,
+                             pcie_active=pcie_active and engine == "cpu")
+        if hit is None:
+            self.match_stats["skipped"] += 1
+            return 0.0
+        entry, match = hit
+        self.match_stats[match] += 1
+        if match == "exact":
+            return kern.flops / (entry.gflops * 1e9)
+        # roofline classification against the neighbour's achieved point
+        ai = kern.flops / max(kern.bytes, 1.0)
+        knee = entry.gflops / max(entry.gbps, 1e-9)
+        if ai >= knee:
+            return kern.flops / (entry.gflops * 1e9)
+        return kern.bytes / (entry.gbps * 1e9)
+
+    def sublayer_compute(self, sub: SubLayer, engine: str, new_tokens: int,
+                         setting: InferenceSetting,
+                         pcie_active: bool = False) -> float:
+        ks = sub.kernels(new_tokens, setting.context, setting.batch)
+        return sum(self.kernel_time(engine, k, pcie_active) for k in ks)
+
+    # ------------------------------------------------------------ plans
+    def _transfer_bytes(self, pl: Placement, plan: Plan, setting) -> float:
+        """Per-iteration link traffic caused by this placement."""
+        bytes_ = 0.0
+        if pl.streamed and pl.engine == "gpu":
+            bytes_ += pl.sub.weight_bytes
+        if pl.sub.kind == "kv":
+            # KV in sysram but attention on GPU -> stream cache across link
+            attn = self._attn_of(pl, plan)
+            if attn is not None and attn.engine == "gpu" \
+                    and pl.residency == "sysram":
+                bytes_ += pl.sub.bytes_resident(setting)
+        return bytes_
+
+    @staticmethod
+    def _attn_of(kv_pl: Placement, plan: Plan):
+        for p in plan.placements:
+            if p.sub.layer == kv_pl.sub.layer and p.sub.kind == "attn" \
+                    and p.sub.name.rsplit("/", 1)[0] == kv_pl.sub.name.rsplit("/", 1)[0]:
+                return p
+        return None
+
+    def _boundary_bytes(self, prev: Optional[Placement], cur: Placement,
+                        new_tokens: int) -> float:
+        """Activation hop when execution engine changes (paper Plan Static)."""
+        if prev is None or prev.engine == cur.engine:
+            return 0.0
+        d = cur.sub.meta.get("d") or prev.sub.meta.get("d") or 0
+        return 2.0 * new_tokens * d
+
+    def plan_time(self, plan: Plan, new_tokens: int,
+                  setting: InferenceSetting) -> float:
+        link_bw = self.sys.link_gbps * 1e9
+        # first pass: will the link be busy? (contention decision)
+        total_xfer = sum(self._transfer_bytes(p, plan, setting)
+                         for p in plan.placements)
+        rough_compute = sum(
+            self.sublayer_compute(p.sub, p.engine, new_tokens, setting)
+            for p in plan.placements if p.sub.kind != "kv")
+        pcie_busy = (total_xfer / link_bw) > 0.3 * max(rough_compute, 1e-9)
+
+        link_done = 0.0
+        finish = 0.0
+        compute_total = {"gpu": 0.0, "cpu": 0.0}
+        prev = None
+        for p in plan.placements:
+            xfer = self._transfer_bytes(p, plan, setting) \
+                + self._boundary_bytes(prev, p, new_tokens)
+            link_done += xfer / link_bw
+            c = 0.0
+            if p.sub.kind != "kv":
+                c = self.sublayer_compute(p.sub, p.engine, new_tokens, setting,
+                                          pcie_active=pcie_busy)
+                compute_total[p.engine] += c
+            ready = max(finish, link_done)
+            finish = ready + c
+            prev = p
+        plan.detail = {"xfer_s": link_done, "gpu_s": compute_total["gpu"],
+                       "cpu_s": compute_total["cpu"], "pcie_busy": pcie_busy}
+        return finish

@@ -1,0 +1,93 @@
+"""Build the sub-layer graph of a ModelConfig (paper: ShardIntoSubLayers).
+
+``shard_div`` divides weight/KV sizes for pod-scale use: when the model is
+already TP/EP-sharded across a mesh, the planner sees the per-chip slice
+(client mode: div=1 everywhere).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+from repro.config import ModelConfig
+from repro.core.sublayer import SubLayer
+
+
+@dataclass(frozen=True)
+class ShardDiv:
+    attn: int = 1
+    ffn: int = 1
+    kv: int = 1
+    out: int = 1
+
+
+def build_graph(cfg: ModelConfig, wdtype: int = 2,
+                div: ShardDiv = ShardDiv()) -> List[SubLayer]:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    subs: List[SubLayer] = []
+    subs.append(SubLayer("embed", "embed", -1,
+                         cfg.vocab * d * wdtype // max(div.out, 1),
+                         meta={"d": d, "wdtype": wdtype}))
+    attn_w = (d * H * hd + 2 * d * KV * hd + H * hd * d) * wdtype // div.attn
+    kv_per_tok = 2 * KV * hd * 2 // div.kv  # bf16 cache
+    first_shared = True
+    for layer in range(cfg.n_layers):
+        is_mamba = cfg.family in ("hybrid", "ssm")
+        shared_here = (cfg.shared_attn_every > 0
+                       and (layer + 1) % cfg.shared_attn_every == 0)
+        if not is_mamba:
+            subs.append(SubLayer(f"L{layer}/attn", "attn", layer, attn_w,
+                                 meta={"d": d, "H": H, "KV": KV, "hd": hd,
+                                       "wdtype": wdtype}))
+            subs.append(SubLayer(f"L{layer}/kv", "kv", layer, 0,
+                                 kv_bytes_per_token=kv_per_tok))
+            if cfg.moe is not None:
+                m = cfg.moe
+                w = m.n_experts * 3 * d * m.d_expert * wdtype // div.ffn
+                subs.append(SubLayer(f"L{layer}/moe", "moe", layer, w,
+                                     meta={"d": d, "f": m.d_expert,
+                                           "E": m.n_experts, "top_k": m.top_k,
+                                           "wdtype": wdtype}))
+            else:
+                n_mat = 3 if cfg.mlp == "swiglu" else 2
+                w = n_mat * d * cfg.d_ff * wdtype // div.ffn
+                subs.append(SubLayer(f"L{layer}/ffn", "ffn", layer, w,
+                                     meta={"d": d, "f": cfg.d_ff,
+                                           "n_mat": n_mat, "wdtype": wdtype}))
+        else:
+            di, n = cfg.d_inner, cfg.ssm_state
+            w = (d * (2 * di + 2 * n + cfg.n_ssm_heads) + di * d) * wdtype // div.ffn
+            subs.append(SubLayer(f"L{layer}/mamba", "mamba", layer, w,
+                                 meta={"d": d, "di": di, "n": max(n, 1),
+                                       "h": cfg.n_ssm_heads,
+                                       "p": cfg.ssm_head_dim, "wdtype": wdtype}))
+            if shared_here:
+                # one set of shared weights (counted once); per-application KV
+                nm = 3 if cfg.mlp == "swiglu" else 2
+                w_attn = attn_w if first_shared else 0
+                w_ffn = (nm * d * cfg.d_ff * wdtype // div.ffn) if first_shared else 0
+                first_shared = False
+                subs.append(SubLayer(f"L{layer}/shared_attn", "attn", layer,
+                                     w_attn,
+                                     meta={"d": d, "H": H, "KV": KV, "hd": hd,
+                                           "wdtype": wdtype, "shared": True}))
+                subs.append(SubLayer(f"L{layer}/shared_kv", "kv", layer, 0,
+                                     kv_bytes_per_token=kv_per_tok))
+                subs.append(SubLayer(
+                    f"L{layer}/shared_ffn", "ffn", layer, w_ffn,
+                    meta={"d": d, "f": cfg.d_ff, "n_mat": nm, "wdtype": wdtype,
+                          "shared": True}))
+    heads = max(1, cfg.n_codebooks or 1)
+    subs.append(SubLayer("outs/head", "out", cfg.n_layers,
+                         heads * d * cfg.vocab * wdtype // max(div.out, 1),
+                         meta={"d": d, "V": cfg.vocab * heads, "wdtype": wdtype}))
+    return subs
+
+
+def total_weight_bytes(subs) -> int:
+    return sum(s.weight_bytes for s in subs)
+
+
+def total_kv_bytes(subs, setting) -> int:
+    return sum(s.bytes_resident(setting) for s in subs if s.kind == "kv")

@@ -1,0 +1,181 @@
+"""Pipelined-sharding planner (paper Algorithm 1, planning phase).
+
+For each token tier: pin the highest-priority sub-layers into the pinnable
+part of the VRAM/HBM budget (attention > KV cache > FFN > outputs), then
+generate the three fundamental plans for the remainder and keep the
+cheapest per the profile-driven estimator:
+
+  GPU-only  — all unpinned sub-layers execute on the accelerator, weights
+              streamed just-in-time into a scratch double-buffer.
+  Static    — unpinned sub-layers stay in sysRAM and execute on the CPU;
+              only activations cross the link.
+  Dynamic   — cost-balanced hybrid: sub-layers go to the CPU while their CPU
+              time fits under the accumulated streaming time of the
+              GPU-streamed ones (CPU compute hides under the link).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.costmodel import Placement, Plan, TimingEstimator
+from repro.core.sublayer import SubLayer
+from repro.core.system import InferenceSetting, SystemConfig
+
+TIERS = (1, 4, 16, 32, 64, 512, 1024, 2048, 4096, 8192, 16384)
+
+
+@dataclass
+class TierEntry:
+    plan: Plan
+    est_time: float
+
+
+@dataclass
+class Schedule:
+    """Planner output: per-tier best plans + metadata."""
+    tiers: Dict[int, TierEntry]
+    pinned_bytes: int
+    scratch_bytes: int
+    budget_bytes: int
+    match_stats: dict = field(default_factory=dict)
+
+    def pick_tier(self, batch_tokens: int) -> int:
+        """Paper: argmin over ceil(tokens/tier) * time[tier]."""
+        best, best_cost = None, float("inf")
+        for t, e in self.tiers.items():
+            cost = math.ceil(batch_tokens / t) * e.est_time
+            if cost < best_cost:
+                best, best_cost = t, cost
+        return best
+
+    def time_for_tokens(self, batch_tokens: int) -> float:
+        t = self.pick_tier(batch_tokens)
+        return math.ceil(batch_tokens / t) * self.tiers[t].est_time
+
+    def plan_for_tokens(self, batch_tokens: int) -> Plan:
+        return self.tiers[self.pick_tier(batch_tokens)].plan
+
+
+def decide_scratch_budget(budget: int, subs: List[SubLayer],
+                          setting: InferenceSetting, tier: int) -> int:
+    """VRAM scratch: double-buffer for the largest streamable weight +
+    activation working set for this tier."""
+    max_w = max((s.weight_bytes for s in subs), default=0)
+    d = max((s.meta.get("d", 0) for s in subs), default=0)
+    act = 4 * tier * d * 2  # a few activation buffers at this tier
+    return min(budget // 2, 2 * max_w + act)
+
+
+def pin_by_priority(pinned_budget: int, subs: List[SubLayer],
+                    setting: InferenceSetting):
+    """Fit as many sub-layers as possible, priority order (stable by layer)."""
+    order = sorted(subs, key=lambda s: (s.priority, s.layer))
+    pinned, remaining = set(), []
+    used = 0
+    for s in order:
+        b = s.bytes_resident(setting)
+        if used + b <= pinned_budget:
+            pinned.add(s.name)
+            used += b
+        else:
+            remaining.append(s)
+    return pinned, used
+
+
+def _mk(sub, pinned):
+    if sub.name in pinned:
+        return Placement(sub, "vram", "gpu", streamed=False)
+    return None
+
+
+def plan_gpu_only(subs, pinned) -> Plan:
+    pls = []
+    for s in subs:
+        p = _mk(s, pinned)
+        if p is None:
+            res = "sysram"
+            p = Placement(s, res, "gpu", streamed=s.kind != "kv")
+        pls.append(p)
+    return Plan("gpu-only", pls)
+
+
+def plan_static(subs, pinned) -> Plan:
+    pls = []
+    for s in subs:
+        p = _mk(s, pinned)
+        if p is None:
+            p = Placement(s, "sysram", "cpu", streamed=False)
+        pls.append(p)
+    return Plan("static", pls)
+
+
+def plan_dynamic(subs, pinned, est: TimingEstimator, tier: int,
+                 setting: InferenceSetting) -> Plan:
+    """Greedy cost balance: CPU picks up sub-layers while its accumulated
+    time hides under the accumulated GPU weight-streaming time."""
+    link_bw = est.sys.link_gbps * 1e9
+    pls = []
+    cum_cpu = 0.0
+    cum_stream = 0.0
+    for s in subs:
+        p = _mk(s, pinned)
+        if p is not None:
+            pls.append(p)
+            continue
+        if s.kind == "kv":
+            pls.append(Placement(s, "sysram", "cpu", streamed=False))
+            continue
+        t_cpu = est.sublayer_compute(s, "cpu", tier, setting, pcie_active=True)
+        t_stream = s.weight_bytes / link_bw
+        if cum_cpu + t_cpu <= cum_stream + t_stream:
+            cum_cpu += t_cpu
+            pls.append(Placement(s, "sysram", "cpu", streamed=False))
+        else:
+            cum_stream += t_stream
+            pls.append(Placement(s, "sysram", "gpu", streamed=True))
+    return Plan("dynamic", pls)
+
+
+def plan_tier(budget: int, subs: List[SubLayer], est: TimingEstimator,
+              setting: InferenceSetting, tier: int) -> TierEntry:
+    scratch = decide_scratch_budget(budget, subs, setting, tier)
+    pinned_budget = budget - scratch
+    pinned, _used = pin_by_priority(pinned_budget, subs, setting)
+    plans = [
+        plan_gpu_only(subs, pinned),
+        plan_static(subs, pinned),
+        plan_dynamic(subs, pinned, est, tier, setting),
+    ]
+    for p in plans:
+        p.est_time = est.plan_time(p, tier, setting)
+    best = min(plans, key=lambda p: p.est_time)
+    return TierEntry(best, best.est_time)
+
+
+def build_schedule(budget_bytes: int, subs: List[SubLayer],
+                   est: TimingEstimator, setting: InferenceSetting,
+                   tiers=TIERS) -> Schedule:
+    entries = {}
+    pinned_bytes = scratch = 0
+    for t in tiers:
+        e = plan_tier(budget_bytes, subs, est, setting, t)
+        entries[t] = e
+    scratch = decide_scratch_budget(budget_bytes, subs, setting, tiers[0])
+    pinned, used = pin_by_priority(budget_bytes - scratch, subs, setting)
+    return Schedule(tiers=entries, pinned_bytes=used, scratch_bytes=scratch,
+                    budget_bytes=budget_bytes,
+                    match_stats=dict(est.match_stats))
+
+
+# ---------------------------------------------------------------- metrics
+def estimate_ttft(sched: Schedule, isl: int) -> float:
+    """Context phase: chunked prefill at the chosen tier."""
+    return sched.time_for_tokens(isl)
+
+
+def estimate_tps(sched: Schedule, batch: int = 1) -> float:
+    """Decode phase: batch-wide new tokens per iteration = batch."""
+    t = sched.time_for_tokens(batch)
+    return batch / max(t, 1e-12)

@@ -1,0 +1,37 @@
+"""Model-facing jit'd wrappers around the Pallas kernels.
+
+``flash_attention_btHd`` adapts the model layout (B, T, H, hd) and the GQA
+cache layout; on non-TPU backends it transparently falls back to the pure
+jnp oracle unless ``interpret=True`` is forced (kernels are validated in
+interpret mode on CPU; TPU is the deployment target).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.streamed_matmul import (  # noqa: F401
+    quantize_int8, streamed_matmul, streamed_matmul_int8)
+
+
+def _on_tpu():
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "force"))
+def flash_attention_bthd(q, k, v, *, causal=True, block_q=128, block_k=128,
+                         force=False):
+    """q: (B, T, H, hd); k, v: (B, T, KV, hd) -> (B, T, H, hd)."""
+    qh = jnp.moveaxis(q, 1, 2)
+    kh = jnp.moveaxis(k, 1, 2)
+    vh = jnp.moveaxis(v, 1, 2)
+    if _on_tpu() or force:
+        o = flash_attention(qh, kh, vh, causal=causal, block_q=block_q,
+                            block_k=block_k, interpret=not _on_tpu())
+    else:
+        o = kref.flash_attention_ref(qh, kh, vh, causal=causal)
+    return jnp.moveaxis(o, 1, 2)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q: (B, H, Tq, hd); k, v: (B, KV, Tk, hd). Full-materialisation."""
+    B, H, Tq, hd = q.shape
+    KV, Tk = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Tq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgtd,bksd->bkgts", qg, kf) * hd ** -0.5
+    if causal:
+        mask = jnp.arange(Tk)[None, :] <= jnp.arange(Tq)[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bksd->bkgtd", p, vf)
+    return o.reshape(B, H, Tq, hd).astype(q.dtype)
+
+
+def streamed_matmul_ref(x, w):
+    return (x.astype(jnp.float32) @ w.astype(jnp.float32)).astype(x.dtype)
+
+
+def streamed_matmul_int8_ref(x, w_q, scales, block_k=512):
+    K, N = w_q.shape
+    wt = w_q.reshape(K // block_k, block_k, N).astype(jnp.float32)
+    w = (wt * scales).reshape(K, N)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

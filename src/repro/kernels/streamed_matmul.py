@@ -1,0 +1,128 @@
+"""Streamed (pipelined copy-compute) matmul — the paper's core mechanism,
+expressed at the TPU memory hierarchy.
+
+The paper overlaps PCIe weight copies with GPU compute through a VRAM
+scratch double-buffer. The TPU-native analogue one level down: weight tiles
+stream HBM->VMEM while the MXU computes the previous tile. Pallas emits
+exactly this double-buffered DMA pipeline from the BlockSpecs: the kv grid
+axis is "arbitrary" (sequential), so tile j+1's DMA overlaps tile j's dot.
+
+Also provides the int8-quantised variant (``quant=True``): weights stream in
+int8 with per-(tile,column) scales and dequantise in VMEM — halving the
+streamed bytes, which is how the paper's q4/q2 GGUF models keep the slow
+tier affordable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_k):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w_ref[...].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _mm_quant_kernel(x_ref, w_ref, s_ref, o_ref, acc_ref, *, n_k):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = s_ref[0, 0].astype(jnp.float32)  # (block_n,)
+    w = w_ref[...].astype(jnp.float32) * s[None, :]
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w,
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def streamed_matmul(x, w, *, block_m=128, block_n=128, block_k=512,
+                    interpret=False):
+    """x: (M, K) resident activations; w: (K, N) streamed weight tiles."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    n_k = K // block_k
+    kernel = functools.partial(_mm_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // block_m, N // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w)
+
+
+def quantize_int8(w, block_k=512):
+    """Per-(k-tile, column) symmetric int8 quantisation."""
+    K, N = w.shape
+    assert K % block_k == 0
+    wt = w.reshape(K // block_k, block_k, N).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(wt), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(wt / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(K, N), scale.astype(jnp.float32)  # scales: (K/bk, 1, N)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def streamed_matmul_int8(x, w_q, scales, *, block_m=128, block_n=128,
+                         block_k=512, interpret=False):
+    """x: (M, K); w_q: (K, N) int8; scales: (K/block_k, 1, N)."""
+    M, K = x.shape
+    _, N = w_q.shape
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    assert scales.shape[0] == K // block_k
+    n_k = K // block_k
+    kernel = functools.partial(_mm_quant_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // block_m, N // block_n, n_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1, block_n), lambda i, j, k: (k, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, w_q, scales)

@@ -1,0 +1,136 @@
+"""HLO text analysis: collective-byte accounting for the roofline.
+
+``cost_analysis()`` has no collective information, so we parse the compiled
+HLO module: every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op is counted with its RESULT tensor size, converted to
+per-chip ICI traffic with the standard ring-algorithm factors:
+
+    all-reduce         2 * size * (n-1)/n
+    all-gather         size * (n-1)/n        (size = gathered result)
+    reduce-scatter     size_in * (n-1)/n     (~ result * (n-1))
+    all-to-all         size * (n-1)/n
+    collective-permute size
+
+Collectives inside ``while`` bodies (layer scans) are counted once by the
+text, so we attribute per-computation and multiply while-body computations
+by the caller-supplied trip count (the layer count — see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\(?)([a-z0-9]+)\[([\d,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_GROUP_RE = re.compile(r"replica_groups=\{(.*?)\}\s*,?")
+_COMP_RE = re.compile(r"^(%?[\w\.\-_]+)\s+(?:\([^)]*\))?\s*->.*\{\s*$")
+_WHILE_BODY_RE = re.compile(r"body=(%?[\w\.\-_]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _traffic(kind: str, size: int, group: int) -> float:
+    if group <= 1:
+        return 0.0
+    f = (group - 1) / group
+    if kind == "all-reduce":
+        return 2.0 * size * f
+    if kind == "all-gather":
+        return size * f
+    if kind == "reduce-scatter":
+        return size * (group - 1)  # result is already scattered (1/n of input)
+    if kind == "all-to-all":
+        return size * f
+    return float(size)  # collective-permute
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_RE.search(line)
+    if not m:
+        return 2
+    body = m.group(1)
+    first = body.split("}")[0].lstrip("{")
+    ids = [x for x in first.split(",") if x.strip() != ""]
+    return max(2, len(ids))
+
+
+def split_computations(hlo: str) -> dict:
+    """Split HLO text into computation_name -> list of lines."""
+    comps = {}
+    current, buf = None, []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(ENTRY\s+)?(%?[\w\.\-_]+)\s*(\([^)]*\))?\s*->\s*\S+.*\{", stripped)
+        if m and not stripped.startswith("ROOT"):
+            if current is not None:
+                comps[current] = buf
+            current = m.group(2)
+            buf = []
+        elif current is not None:
+            buf.append(line)
+    if current is not None:
+        comps[current] = buf
+    return comps
+
+
+def collective_bytes(hlo: str, while_trips: int = 1) -> dict:
+    """Returns {"per_op": [...], "total_bytes": float, "by_kind": {...}}.
+
+    while_trips multiplies collectives found outside the entry computation
+    (layer-scan bodies). Exact attribution per while op would require a full
+    call-graph walk; the per-layer probe path (exact, no loops) is the source
+    of truth for roofline numbers — this function reports the schedule.
+    """
+    comps = split_computations(hlo)
+    entry_name = None
+    for line in hlo.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+(%?[\w\.\-_]+)", line.strip())
+            if m:
+                entry_name = m.group(1)
+    # which computations are while bodies?
+    bodies = set()
+    for m in _WHILE_BODY_RE.finditer(hlo):
+        bodies.add(m.group(1))
+
+    per_op = []
+    by_kind = defaultdict(float)
+    total = 0.0
+    for comp, lines in comps.items():
+        in_body = comp in bodies or (entry_name is not None and comp != entry_name)
+        mult = while_trips if in_body else 1
+        for line in lines:
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            dtype, dims, kind = m.groups()
+            if "-done(" in line:
+                continue  # async pair: count the -start only
+            size = _shape_bytes(dtype, dims)
+            group = _group_size(line)
+            traffic = _traffic(kind, size, group) * mult
+            per_op.append({"kind": kind, "result_bytes": size, "group": group,
+                           "computation": comp, "mult": mult,
+                           "traffic_bytes": traffic})
+            by_kind[kind] += traffic
+            total += traffic
+    return {"per_op": per_op, "total_bytes": total, "by_kind": dict(by_kind)}
+
+
+def collective_summary(hlo: str, while_trips: int = 1) -> str:
+    r = collective_bytes(hlo, while_trips)
+    kinds = ", ".join(f"{k}:{v/1e6:.1f}MB" for k, v in sorted(r["by_kind"].items()))
+    return f"{len(r['per_op'])} collective ops, {r['total_bytes']/1e6:.1f}MB traffic ({kinds})"

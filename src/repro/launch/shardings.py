@@ -1,0 +1,296 @@
+"""Per-architecture ShardingPolicy: divisibility-aware DP/TP/EP/SP specs.
+
+Rules (DESIGN.md §6):
+- batch -> ("pod","data") when divisible; long_500k (gb=1) replicates batch.
+- attention heads -> "model" when n_heads % tp == 0, else attention runs with
+  the *sequence* dim sharded over "model" (SP-attention) so compute still
+  splits 16-way for non-divisible head counts.
+- KV cache -> kv-heads over "model" when divisible, else seq over "model";
+  for gb=1 the free "data" axis picks up the seq (or head) dim.
+- MoE experts -> "model" (EP); vocab -> "model"; FFN hidden -> "model".
+- fsdp=True additionally shards big params over "data" (ZeRO-3 style;
+  XLA inserts the all-gathers); used by the >=100B configs.
+- offload_opt=True maps optimizer state to pinned_host memory (the paper's
+  sysRAM tier at pod scale).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import NoPolicy
+
+# params resident beyond this many bytes/chip trigger FSDP by default
+FSDP_THRESHOLD_BYTES = 8e9
+
+
+class ShardingPolicy:
+    def __init__(self, mesh, cfg, shape=None, fsdp: Optional[bool] = None,
+                 offload_opt: bool = False):
+        self.mesh = mesh
+        self.cfg = cfg
+        self.shape = shape
+        self.axes = list(mesh.axis_names)
+        self.tp = mesh.shape["model"]
+        self.dp_axes = tuple(a for a in ("pod", "data") if a in self.axes)
+        self.dp_size = int(np.prod([mesh.shape[a] for a in self.dp_axes]))
+        gb = shape.global_batch if shape is not None else None
+        self.batch_shardable = gb is None or gb % self.dp_size == 0
+        self.batch_axes = self.dp_axes if self.batch_shardable else ()
+        self.heads_tp = cfg.n_heads % self.tp == 0
+        self.kv_tp = cfg.n_kv_heads % self.tp == 0
+        self.offload_opt = offload_opt
+        if fsdp is None:
+            per_chip = 2 * cfg.param_count() / self.tp
+            fsdp = per_chip > FSDP_THRESHOLD_BYTES
+        self.fsdp = fsdp
+        # tiny models: TP overhead exceeds benefit; replicate weights (DP only)
+        self.dp_only = cfg.param_count() < 5e8
+        # Megatron-style sequence parallelism on the residual stream: layer
+        # inputs (the remat checkpoints) shrink tp-fold; XLA converts the TP
+        # all-reduces into all-gather + reduce-scatter pairs around attention.
+        # NOT for recurrent families — a seq-sharded residual forces per-layer
+        # all-gathers around every Mamba/xLSTM scan (perf iteration B1).
+        seq = shape.seq_len if shape is not None else 0
+        self.seq_sharded = (not self.dp_only and shape is not None
+                            and cfg.family not in ("hybrid", "ssm")
+                            and shape.kind in ("train", "prefill")
+                            and seq % self.tp == 0)
+        # ZeRO-DP in training: batch shards over the full mesh (data x
+        # model), weights stay model-sharded (XLA inserts the per-layer
+        # weight all-gathers = FSDP); collective volume drops from
+        # O(activations) to O(weights) per layer. First measured on the
+        # recurrent families (B2, 19x), then generalised to dense train —
+        # the whole collective-bound class (§Perf "global iteration G1").
+        # MoE keeps TP+EP: the expert shard_map needs tokens replicated
+        # across "model".
+        self.zero_dp = (cfg.moe is None and shape is not None
+                        and shape.kind == "train"
+                        and gb is not None
+                        and gb % int(np.prod(list(mesh.shape.values()))) == 0)
+        if self.zero_dp:
+            self.batch_axes = tuple(mesh.axis_names)
+            self.dp_size = int(np.prod(list(mesh.shape.values())))
+            self.seq_sharded = False  # "model" is a batch axis now
+            # weight-STORAGE sharding needs only the flat (H*hd) dim to
+            # divide — true for every config — not per-head divisibility
+            # (compute is local after the FSDP gather). G1 follow-up.
+            if (cfg.n_heads * cfg.resolved_head_dim) % self.tp == 0:
+                self.heads_tp = True
+            if (cfg.n_kv_heads * cfg.resolved_head_dim) % self.tp == 0:
+                self.kv_tp = True
+        # dp_only decode still TPs the FFN: per-step weight traffic dominates
+        # small-model decode, and FFN all-reduces at T=1 are tiny (A2)
+        self.ffn_tp = (self.dp_only and shape is not None
+                       and shape.kind == "decode"
+                       and cfg.d_ff > 0 and cfg.d_ff % self.tp == 0)
+
+    # -------------------------------------------------- activation specs
+    def spec(self, kind):
+        b = self.batch_axes if self.batch_axes else None
+        B = (b,) if b else (None,)
+        if kind == "resid":
+            if self.seq_sharded:
+                return P(*B, "model", None)
+            return P(*B, None, None)
+        if kind == "heads":  # q / attn out: (B, T, H, hd)
+            if self.dp_only or self.zero_dp:
+                return P(*B, None, None, None)
+            if self.heads_tp:
+                return P(*B, None, "model", None)
+            return P(*B, "model", None, None)  # SP-attention over T
+        if kind == "kv_cache":  # (B, KV, S, hd) (layer dim handled by caller)
+            return self.kv_cache_spec(stacked=False)
+        if kind == "ffn_hidden":
+            if self.ffn_tp:
+                return P(*B, None, "model")
+            if self.dp_only or self.zero_dp:
+                return P(*B, None, None)
+            return P(*B, None, "model")
+        if kind == "logits":
+            if self.dp_only or self.zero_dp:
+                return P(*B, None, None)
+            if self.seq_sharded:
+                return P(*B, "model", None)
+            return P(*B, None, "model")
+        if kind == "ssm_heads":  # (B, T, H_ssm, P)
+            if self.dp_only or self.zero_dp:
+                return P(*B, None, None, None)
+            return P(*B, None, "model", None)
+        return None
+
+    def kv_cache_spec(self, stacked=True):
+        lead = (None,) if stacked else ()
+        b = self.batch_axes if self.batch_axes else None
+        if self.batch_axes:
+            if "model" in self.batch_axes:  # zero_dp: batch uses every axis
+                return P(*lead, b, None, None, None)
+            if self.kv_tp and not self.dp_only:
+                return P(*lead, b, "model", None, None)
+            # dp_only models still shard the (large) KV seq over the idle
+            # model axis — replicating the cache 16x was pure waste (A1)
+            return P(*lead, b, None, "model", None)  # seq over model
+        # gb=1 (long_500k): free data axis takes seq; model takes kv heads
+        if self.kv_tp and not self.dp_only:
+            return P(*lead, None, "model", "data", None)
+        return P(*lead, None, None, ("data", "model"), None)
+
+    def constrain(self, x, kind):
+        s = self.spec(kind)
+        if s is None:
+            return x
+        try:
+            return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, s))
+        except (ValueError, TypeError):
+            return x  # non-divisible edge: leave placement to GSPMD
+
+    # -------------------------------------------------- param specs
+    def _param_spec(self, path: str, leaf) -> P:
+        cfg = self.cfg
+        fsdp_ax = "data" if (self.fsdp and "data" in self.axes) else None
+        if self.dp_only:
+            # fully replicated params (incl. embeddings: a vocab-sharded
+            # embed table on a dp-only model costs a full-table all-gather
+            # per step for zero memory benefit at <0.5B scale — A1)
+            name = path.split("/")[-1]
+            if self.ffn_tp and name in ("w_gate", "w_up", "w_down") \
+                    and leaf.ndim >= 2:
+                lead = (None,) * (leaf.ndim - 2)
+                if name == "w_down":
+                    return P(*lead, "model", None)
+                return P(*lead, None, "model")
+            return P(*(None,) * leaf.ndim)
+
+        def p2(a0, a1):  # 2D matrix spec with optional fsdp on the other dim
+            if fsdp_ax and a0 is None and a1 is not None:
+                return P(fsdp_ax, a1)
+            if fsdp_ax and a1 is None and a0 is not None:
+                return P(a0, fsdp_ax)
+            return P(a0, a1)
+
+        name = path.split("/")[-1]
+        # stacked-layer leading dims: layers (L,), zamba groups (G, per,), tail
+        n_lead = 0
+        if any(s in path for s in ("layers/", "pairs/", "tail/")):
+            n_lead = 1
+        elif "groups/" in path:
+            n_lead = 2
+        lead = (None,) * n_lead
+        body_ndim = leaf.ndim - n_lead
+
+        # embeddings / output heads (never stacked)
+        if name == "embed":
+            if cfg.n_codebooks:
+                return P(None, "model", None)
+            return p2("model", None)
+        if name == "unembed":
+            if cfg.n_codebooks:
+                return P(None, None, "model")
+            return p2(None, "model")
+        # attention
+        if name == "wq":
+            return P(*lead, *p2(None, "model" if self.heads_tp else None))
+        if name in ("wk", "wv"):
+            return P(*lead, *p2(None, "model" if self.kv_tp else None))
+        if name == "wo":
+            return P(*lead, *p2("model" if self.heads_tp else None, None))
+        if name == "bq":
+            return P(*lead, "model" if self.heads_tp else None)
+        if name in ("bk", "bv"):
+            return P(*lead, "model" if self.kv_tp else None)
+        # moe experts (E, d, f) / (E, f, d) + int8 scales (E, 1, 1)
+        if name in ("s_gate", "s_up", "s_down"):
+            return P(*lead, "model", None, None)
+        if name in ("w_gate", "w_up", "w_down") and body_ndim == 3:
+            if fsdp_ax:
+                return P(*lead, "model", fsdp_ax, None)
+            return P(*lead, "model", None, None)
+        # dense ffn
+        if name in ("w_gate", "w_up") and body_ndim == 2:
+            return P(*lead, *p2(None, "model"))
+        if name == "w_down" and body_ndim == 2:
+            return P(*lead, *p2("model", None))
+        if name == "router":
+            return P(*lead, None, None)
+        # mamba
+        if name in ("w_z", "w_xbc"):
+            return P(*lead, *p2(None, "model"))
+        if name == "out_proj":
+            return P(*lead, *p2("model", None))
+        if name in ("w_dt", "conv_w"):
+            return P(*lead, None, None)
+        if name == "gate_norm":
+            return P(*lead, "model")
+        # norms / biases / mlstm / slstm internals: replicated over mesh
+        return P(*(None,) * leaf.ndim)
+
+    def params_sharding(self, params):
+        def assign(path, leaf):
+            pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            spec = self._param_spec(pstr, leaf)
+            if len(spec) != leaf.ndim:
+                spec = P(*(list(spec) + [None] * (leaf.ndim - len(spec)))[:leaf.ndim])
+            return NamedSharding(self.mesh, spec)
+        return jax.tree_util.tree_map_with_path(assign, params)
+
+    def opt_sharding(self, params_sharding):
+        """Optimizer state shardings mirror params; optionally host-offloaded.
+
+        Only >=2D leaves are offloaded — rank-0/1 leaves trip an XLA SPMD
+        side-effect check on host-placement custom-calls, and they carry a
+        negligible fraction of the bytes.
+        """
+        def conv(s):
+            kind = ("pinned_host"
+                    if self.offload_opt and len(s.spec) >= 2 else "device")
+            return NamedSharding(self.mesh, s.spec, memory_kind=kind)
+        mv = jax.tree.map(conv, params_sharding)
+        return {"m": mv, "v": jax.tree.map(lambda s: s, mv),
+                "step": NamedSharding(self.mesh, P())}
+
+    # -------------------------------------------------- inputs
+    def batch_sharding(self, batch_specs):
+        b = self.batch_axes if self.batch_axes else None
+
+        def assign(path, leaf):
+            name = str(getattr(path[-1], "key", ""))
+            if name == "positions":  # (3, B, T) / (3, B, 1)
+                return NamedSharding(self.mesh, P(None, b, None))
+            if name == "vision_embeds":
+                return NamedSharding(self.mesh, P(b, None, None))
+            spec = P(b, *(None,) * (leaf.ndim - 1))
+            return NamedSharding(self.mesh, spec)
+        return jax.tree_util.tree_map_with_path(assign, batch_specs)
+
+    def cache_sharding(self, cache_specs):
+        b = self.batch_axes if self.batch_axes else None
+
+        def assign(path, leaf):
+            pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path)
+            name = pstr.split("/")[-1] if pstr else ""
+            if name in ("k", "v", "kv_k", "kv_v"):  # stacked KV (L,B,KV,S,hd)
+                return NamedSharding(self.mesh, self.kv_cache_spec(stacked=True))
+            if ("ssm" in pstr or name == "m") and leaf.ndim == 5 \
+                    and not self.dp_only:
+                # mamba (L,B,H,P,N) / mlstm (n,B,H,hd+1,hd): heads over model
+                return NamedSharding(self.mesh, P(None, b, "model", None, None))
+            if leaf.ndim >= 2:
+                spec = P(None, b, *(None,) * (leaf.ndim - 2))
+            else:
+                spec = P(*(None,) * leaf.ndim)
+            return NamedSharding(self.mesh, spec)
+        return jax.tree_util.tree_map_with_path(assign, cache_specs)
+
+    def scalar_sharding(self):
+        return NamedSharding(self.mesh, P())
+
+
+def make_policy(mesh, cfg, shape=None, **kw):
+    if mesh is None:
+        return NoPolicy()
+    return ShardingPolicy(mesh, cfg, shape, **kw)

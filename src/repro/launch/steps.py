@@ -1,0 +1,101 @@
+"""Jittable step builders shared by dryrun / train / serve."""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import build_model, cross_entropy
+from repro.optim import OptConfig, adamw_init, adamw_update
+
+
+def make_train_step(cfg, policy=None, oc: OptConfig = None, remat="full",
+                    microbatches: int = 1):
+    """microbatches > 1: gradient accumulation — the batch is split along
+    its leading dim and scanned, shrinking peak activation memory ~N-fold
+    at the cost of N serial passes (the standard lever for HBM-tight cells
+    like kimi-k2 train; EXPERIMENTS.md §Perf extra iteration)."""
+    model = build_model(cfg)
+    oc = oc or OptConfig()
+
+    def loss_fn(p, b):
+        logits, _ = model.apply(p, b, policy=policy, remat=remat)
+        return cross_entropy(cfg, logits, b)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            B = batch["tokens"].shape[0]
+
+            def split(x):
+                if x.shape[0] == B:  # batch-major leaves
+                    return x.reshape(microbatches, B // microbatches,
+                                     *x.shape[1:])
+                # vlm positions: (3, B, T) — batch at dim 1
+                y = x.reshape(x.shape[0], microbatches, B // microbatches,
+                              *x.shape[2:])
+                return jnp.moveaxis(y, 1, 0)
+            mb = jax.tree.map(split, batch)
+
+            def body(acc, b):
+                acc_loss, acc_g = acc
+                l, g = jax.value_and_grad(loss_fn)(params, b)
+                return (acc_loss + l,
+                        jax.tree.map(jnp.add, acc_g, g)), None
+
+            # accumulator dtype: fp32 costs a params-sized fp32 buffer
+            # (measured +14 GB/chip on kimi-k2 — EXPERIMENTS §Perf); bf16
+            # accumulation over a handful of microbatches is the standard
+            # large-scale compromise
+            acc_mode = os.environ.get("REPRO_ACCUM_DTYPE", "param")
+
+            def acc_dtype(p):  # "param": grad dtype (bf16 weights, fp32 router)
+                return jnp.float32 if acc_mode == "float32" else p.dtype
+            zero = (jnp.zeros((), jnp.float32),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype(p)),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(body, zero, mb)
+            loss = loss / microbatches
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32) / microbatches)
+                .astype(jnp.bfloat16), grads)
+        params2, opt_state2, metrics = adamw_update(oc, grads, opt_state, params)
+        metrics["loss"] = loss
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_loss_step(cfg, policy=None, remat="none"):
+    model = build_model(cfg)
+
+    def loss_step(params, batch):
+        logits, _ = model.apply(params, batch, policy=policy, remat=remat)
+        return cross_entropy(cfg, logits, batch)
+
+    return loss_step
+
+
+def make_prefill_step(cfg, policy=None):
+    model = build_model(cfg)
+
+    def prefill_step(params, batch, cache):
+        logits, cache = model.apply(params, batch, policy=policy, cache=cache,
+                                    cache_pos=0)
+        return logits[:, -1:], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg, policy=None):
+    model = build_model(cfg)
+
+    def serve_step(params, batch, cache, pos):
+        logits, cache = model.apply(params, batch, policy=policy, cache=cache,
+                                    cache_pos=pos)
+        return logits, cache
+
+    return serve_step

@@ -1,0 +1,137 @@
+"""Public model API: ``build_model(cfg)`` -> Model with init/apply/specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step that the shape's kind lowers (train_step for "train",
+prefill/serve_step for "prefill"/"decode") — weak-type-correct, shardable,
+no device allocation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from repro.models import hybrid, transformer, xlstm
+from repro.models.common import NoPolicy
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "audio": transformer,
+    "hybrid": hybrid,
+    "ssm": xlstm,
+}
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+    module: Any
+
+    def init(self, key):
+        return self.module.init_params(self.cfg, key)
+
+    def init_cache(self, batch, max_seq):
+        return self.module.init_cache(self.cfg, batch, max_seq)
+
+    def apply(self, params, batch, policy=None, cache=None, cache_pos=None,
+              remat="none"):
+        return self.module.forward(params, self.cfg, batch, policy=policy,
+                                   cache=cache, cache_pos=cache_pos, remat=remat)
+
+    # ---------------- loss ----------------
+    def loss(self, params, batch, policy=None, remat="none"):
+        logits, _ = self.apply(params, batch, policy=policy, remat=remat)
+        return cross_entropy(self.cfg, logits, batch)
+
+    # ---------------- serving steps ----------------
+    def prefill(self, params, batch, cache, policy=None):
+        """Populate the cache with the prompt; returns (last_logits, cache)."""
+        logits, cache = self.apply(params, batch, policy=policy, cache=cache,
+                                   cache_pos=0)
+        return logits[:, -1:], cache
+
+    def decode_step(self, params, token_batch, cache, pos, policy=None):
+        """One new token per sequence against a populated cache."""
+        logits, cache = self.apply(params, token_batch, policy=policy,
+                                   cache=cache, cache_pos=pos)
+        return logits, cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg, module=_FAMILY_MODULES[cfg.family])
+
+
+# ---------------------------------------------------------------- loss
+def cross_entropy(cfg, logits, batch):
+    """Masked LM cross-entropy; fp32 math over (possibly vocab-sharded) logits."""
+    labels = batch["labels"]
+    lg = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lg.max(axis=-1, keepdims=True))
+    shifted = lg - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    # label logit via iota-mask (not take_along_axis): stays partitioned when
+    # the vocab dim is sharded — no all-gather of the logits tensor.
+    vocab_iota = jnp.arange(lg.shape[-1], dtype=labels.dtype)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], lg, 0.0), axis=-1)
+    nll = lse - label_logit
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------- specs
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the step inputs of this (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    tok_shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+
+    if shape.kind == "train":
+        batch = {"tokens": _sds(tok_shape, i32), "labels": _sds(tok_shape, i32)}
+        if cfg.family == "vlm":
+            nv = cfg.n_vision_tokens
+            batch = {
+                "tokens": _sds((B, S - nv), i32),
+                "vision_embeds": _sds((B, nv, cfg.d_model), bf16),
+                "positions": _sds((3, B, S), i32),
+                "labels": _sds((B, S), i32),
+                "loss_mask": _sds((B, S), jnp.float32),
+            }
+        return {"batch": batch}
+
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds(tok_shape, i32)}
+        if cfg.family == "vlm":
+            nv = cfg.n_vision_tokens
+            batch = {
+                "tokens": _sds((B, S - nv), i32),
+                "vision_embeds": _sds((B, nv, cfg.d_model), bf16),
+                "positions": _sds((3, B, S), i32),
+            }
+        return {"batch": batch, "cache": cache_specs(cfg, B, S)}
+
+    # decode: one new token against a cache of S
+    tok = (B, 1, cfg.n_codebooks) if cfg.n_codebooks else (B, 1)
+    batch = {"tokens": _sds(tok, i32)}
+    if cfg.family == "vlm":
+        batch["positions"] = _sds((3, B, 1), i32)
+    return {"batch": batch, "cache": cache_specs(cfg, B, S),
+            "pos": _sds((), i32)}
+
+
+def cache_specs(cfg, batch, max_seq):
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(batch, max_seq))
+    return cache

@@ -1,0 +1,208 @@
+"""GQA/MHA attention: reference, flash-chunked (memory-bounded), and decode paths.
+
+Layout conventions:
+  activations  (B, T, D)
+  q            (B, T, H, hd)
+  k, v         (B, T, KV, hd)
+  KV cache     (B, KV, S, hd)   -- seq-major so the seq dim can be sharded
+
+The flash-chunked path is a two-level ``lax.scan`` with online softmax; it is
+the pure-jnp oracle for the Pallas kernel in ``repro/kernels/flash_attention.py``
+and is used by full-model lowering whenever T exceeds ``FLASH_THRESHOLD``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import apply_mrope, apply_rope, dense_init, rmsnorm
+
+FLASH_THRESHOLD = 2048
+Q_CHUNK = 1024
+KV_CHUNK = 1024
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- params
+def init_attn_params(key, cfg, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), 0, dtype),
+        "wk": dense_init(ks[1], (d, KV * hd), 0, dtype),
+        "wv": dense_init(ks[2], (d, KV * hd), 0, dtype),
+        "wo": dense_init(ks[3], (H * hd, d), 0, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def qkv_project(params, cfg, x, positions):
+    """x: (B, T, D) -> q (B,T,H,hd), k,v (B,T,KV,hd) with rope applied."""
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(B, T, cfg.n_heads, hd)
+    k = k.reshape(B, T, cfg.n_kv_heads, hd)
+    v = v.reshape(B, T, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if cfg.pos == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    # "sin"/"none": positions handled at the embedding level / not at all
+    return q, k, v
+
+
+# ---------------------------------------------------------------- reference
+def attend_ref(q, k, v, causal=True, q_offset=0):
+    """Full-materialisation attention. q: (B,T,H,hd); k,v: (B,S,KV,hd)."""
+    B, T, H, hd = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, T, KV, G, hd)
+    scale = hd ** -0.5
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(T)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bskd->btkgd", p.astype(v.dtype), v)
+    return o.reshape(B, T, H, hd)
+
+
+# ---------------------------------------------------------------- flash scan
+def attend_flash(q, k, v, causal=True, q_chunk=Q_CHUNK, kv_chunk=KV_CHUNK):
+    """Online-softmax chunked attention; memory O(q_chunk * kv_chunk).
+
+    q: (B, T, H, hd); k, v: (B, T, KV, hd). Causal over aligned positions.
+    """
+    B, T, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    q_chunk = min(q_chunk, T)
+    kv_chunk = min(kv_chunk, T)
+    assert T % q_chunk == 0 and T % kv_chunk == 0
+    nq, nk = T // q_chunk, T // kv_chunk
+    scale = hd ** -0.5
+
+    qc = q.reshape(B, nq, q_chunk, KV, G, hd)
+    kc = k.reshape(B, nk, kv_chunk, KV, hd)
+    vc = v.reshape(B, nk, kv_chunk, KV, hd)
+
+    def q_body(_, qi_and_idx):
+        qi, qidx = qi_and_idx  # (B, q_chunk, KV, G, hd)
+        m0 = jnp.full((B, KV, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, KV, G, q_chunk, hd), jnp.float32)
+
+        def kv_body(carry, kv_and_idx):
+            m, l, o = carry
+            ki, vi, kidx = kv_and_idx
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, ki).astype(jnp.float32) * scale
+            if causal:
+                qpos = qidx * q_chunk + jnp.arange(q_chunk)[:, None]
+                kpos = kidx * kv_chunk + jnp.arange(kv_chunk)[None, :]
+                s = jnp.where(kpos <= qpos, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            # guard fully-masked (all NEG_INF) rows: NEG_INF - NEG_INF == 0
+            p = jnp.where(s > NEG_INF / 2, jnp.exp(s - m_new[..., None]), 0.0)
+            l_new = l * alpha + p.sum(axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vi.dtype), vi).astype(jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        (m, l, o), _ = jax.lax.scan(
+            kv_body, (m0, l0, o0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(nk)))
+        o = o / jnp.maximum(l[..., None], 1e-30)
+        # (B, KV, G, q_chunk, hd) -> (B, q_chunk, KV*G, hd)
+        return None, jnp.moveaxis(o, 3, 1).reshape(B, q_chunk, H, hd)
+
+    _, oc = jax.lax.scan(q_body, None, (jnp.moveaxis(qc, 1, 0), jnp.arange(nq)))
+    # oc: (nq, B, q_chunk, H, hd)
+    return jnp.moveaxis(oc, 0, 1).reshape(B, T, H, hd).astype(q.dtype)
+
+
+def attend(q, k, v, causal=True):
+    # REPRO_FORCE_REF_ATTN: the roofline probe lowers a scan-free graph so
+    # XLA cost_analysis counts every FLOP (DESIGN.md §4). Trace-time env read.
+    import os
+    if os.environ.get("REPRO_FORCE_REF_ATTN"):
+        return attend_ref(q, k, v, causal=causal)
+    T = q.shape[1]
+    if T > FLASH_THRESHOLD and T == k.shape[1]:
+        return attend_flash(q, k, v, causal=causal)
+    return attend_ref(q, k, v, causal=causal)
+
+
+# ---------------------------------------------------------------- decode
+def attend_decode(q, cache_k, cache_v, pos):
+    """One-token attention against a cache.
+
+    q: (B, 1, H, hd); cache_k/v: (B, KV, S, hd); pos: scalar int (tokens valid
+    in cache INCLUDING the one just written at index pos).
+    """
+    B, _, H, hd = q.shape
+    KV, S = cache_k.shape[1], cache_k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd)
+    scale = hd ** -0.5
+    s = jnp.einsum("bkgd,bksd->bkgs", qg, cache_k).astype(jnp.float32) * scale
+    valid = jnp.arange(S)[None, None, None, :] <= pos
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", p.astype(cache_v.dtype), cache_v)
+    return o.reshape(B, 1, H, hd)
+
+
+def cache_update(cache_k, cache_v, k, v, pos):
+    """Write k, v (B, T, KV, hd) into caches (B, KV, S, hd) at position pos."""
+    k = jnp.moveaxis(k, 1, 2)  # (B, KV, T, hd)
+    v = jnp.moveaxis(v, 1, 2)
+    ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, 0, pos, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, 0, pos, 0))
+    return ck, cv
+
+
+def attention_block(params, cfg, x, positions, policy, cache=None, cache_pos=None):
+    """Full attention sub-layer (pre-norm residual handled by caller).
+
+    Returns (out, new_cache). cache: dict(k=(B,KV,S,hd), v=...) or None.
+    """
+    B, T, _ = x.shape
+    q, k, v = qkv_project(params, cfg, x, positions)
+    q = policy.constrain(q, "heads")
+    if cache is None:
+        o = attend(q, k, v, causal=True)
+    else:
+        ck, cv = cache_update(cache["k"], cache["v"], k, v, cache_pos)
+        ck = policy.constrain(ck, "kv_cache")
+        cv = policy.constrain(cv, "kv_cache")
+        cache = {"k": ck, "v": cv}
+        if T == 1:
+            o = attend_decode(q, ck, cv, cache_pos)
+        else:  # prefill into cache
+            o = attend(q, k, v, causal=True)
+    o = policy.constrain(o, "heads")
+    out = o.reshape(B, T, cfg.n_heads * cfg.resolved_head_dim) @ params["wo"]
+    return out, cache

@@ -1,0 +1,102 @@
+"""Shared layer primitives: norms, positions, init, sharding hooks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- sharding
+class NoPolicy:
+    """Default sharding policy: no constraints (single-device tests)."""
+
+    mesh = None
+
+    def constrain(self, x, kind):  # noqa: ARG002
+        return x
+
+    def spec(self, kind):  # noqa: ARG002
+        return None
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm(x, scale, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    y = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, scale, bias, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- positions
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., T, H, hd); positions: broadcastable to (..., T)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., T, hd/2)
+    angles = angles[..., None, :]  # (..., T, 1, hd/2) broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions_3d, theta, sections=(16, 24, 24)):
+    """Qwen2-VL M-RoPE. positions_3d: (3, ..., T) for (t, h, w) axes.
+
+    The hd/2 frequency slots are split across the three position axes
+    by ``sections`` (scaled to head_dim/2).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    sec = np.array(sections, dtype=np.float64)
+    sec = np.floor(sec / sec.sum() * half).astype(int)
+    sec[-1] = half - sec[:-1].sum()
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # (half,)
+    # per-frequency-slot axis selector (static)
+    axis_id = np.concatenate([np.full(s, i) for i, s in enumerate(sec)])
+    p = jnp.moveaxis(positions_3d, 0, -1)  # (..., T, 3)
+    pos = p[..., axis_id]  # (..., T, half)
+    angles = pos.astype(jnp.float32) * freqs
+    angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d_model):
+    """AudioCraft-style sin/cos embeddings. positions: (..., T) -> (..., T, d)."""
+    half = d_model // 2
+    freqs = jnp.exp(-np.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------- init
+def dense_init(key, shape, in_axis=0, dtype=jnp.bfloat16):
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else int(
+        np.prod([shape[a] for a in in_axis]))
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key, names):
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))

@@ -1,0 +1,183 @@
+"""zamba2-style hybrid: Mamba2 backbone + one shared transformer block.
+
+Layout: ``n_layers`` Mamba2 layers; after every ``shared_attn_every``-th
+mamba layer, the single *shared* transformer block (attention + FFN, one set
+of weights) is applied — each application has its own KV cache slot.
+
+Scan structure: groups of ``shared_attn_every`` mamba layers are scanned
+(shared block applied once per group, weights broadcast); leftover mamba
+layers are scanned separately. Keeps HLO O(1) in depth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp
+from repro.models import ssm
+from repro.models.common import NoPolicy, dense_init, dtype_of, rmsnorm
+
+
+def _n_groups(cfg):
+    return cfg.n_layers // cfg.shared_attn_every
+
+
+def _n_rem(cfg):
+    return cfg.n_layers - _n_groups(cfg) * cfg.shared_attn_every
+
+
+def init_params(cfg, key):
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    n_grp, rem = _n_groups(cfg), _n_rem(cfg)
+    per = cfg.shared_attn_every
+
+    def group_init(k):
+        lk = jax.random.split(k, per)
+        return jax.vmap(lambda kk: _mamba_layer_init(kk, cfg, dtype))(lk)
+
+    p = {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), 1, dtype),
+        "groups": jax.vmap(group_init)(jax.random.split(ks[1], n_grp)),
+        "shared": {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "attn": attn.init_attn_params(ks[2], cfg, dtype),
+            "ffn": mlp.init_ffn_params(ks[3], cfg, dtype),
+        },
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+        "unembed": dense_init(ks[4], (cfg.d_model, cfg.vocab), 0, dtype),
+    }
+    if rem:
+        rk = jax.random.split(ks[5], rem)
+        p["tail"] = jax.vmap(lambda kk: _mamba_layer_init(kk, cfg, dtype))(rk)
+    return p
+
+
+def _mamba_layer_init(key, cfg, dtype):
+    return {
+        "ln": jnp.ones((cfg.d_model,), dtype),
+        "mamba": ssm.init_mamba_params(key, cfg, dtype),
+    }
+
+
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    """Mamba states for every layer + KV cache per shared-block application."""
+    n_grp, rem = _n_groups(cfg), _n_rem(cfg)
+    per = cfg.shared_attn_every
+    hd = cfg.resolved_head_dim
+
+    def states(n):
+        s = ssm.init_mamba_state(cfg, batch)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n, *x.shape)), s)
+
+    cache = {
+        "groups": states(n_grp * per),
+        "kv_k": jnp.zeros((n_grp, batch, cfg.n_kv_heads, max_seq, hd), dtype),
+        "kv_v": jnp.zeros((n_grp, batch, cfg.n_kv_heads, max_seq, hd), dtype),
+    }
+    if rem:
+        cache["tail"] = states(rem)
+    return cache
+
+
+def _mamba_layer(lp, cfg, x, state):
+    h, new_state = ssm.mamba_block(lp["mamba"], cfg, rmsnorm(x, lp["ln"], cfg.norm_eps),
+                                   state)
+    return x + h, new_state
+
+
+def _shared_block(sp, cfg, x, positions, policy, cache_kv, cache_pos):
+    cache = None if cache_kv is None else {"k": cache_kv[0], "v": cache_kv[1]}
+    h, cache = attn.attention_block(
+        sp["attn"], cfg, rmsnorm(x, sp["ln1"], cfg.norm_eps), positions, policy,
+        cache=cache, cache_pos=cache_pos)
+    x = x + h
+    x = x + mlp.ffn(sp["ffn"], cfg, rmsnorm(x, sp["ln2"], cfg.norm_eps), policy)
+    new_kv = None if cache is None else (cache["k"], cache["v"])
+    return x, new_kv
+
+
+def forward(params, cfg, batch, policy=None, cache=None, cache_pos=None,
+            remat="none"):
+    policy = policy or NoPolicy()
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    per = cfg.shared_attn_every
+    n_grp, rem = _n_groups(cfg), _n_rem(cfg)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    base = cache_pos if cache_pos is not None else 0
+    positions = (base + jnp.arange(T)[None, :]) * jnp.ones((B, 1), jnp.int32)
+    x = policy.constrain(x, "resid")
+
+    has_cache = cache is not None
+    # reshape group mamba states: (n_grp*per, ...) -> (n_grp, per, ...)
+    gstates = None
+    if has_cache:
+        gstates = jax.tree.map(
+            lambda s: s.reshape(n_grp, per, *s.shape[1:]), cache["groups"])
+
+    def group_body(carry, xs):
+        xc = carry
+        gp, gstate, ckv = xs
+
+        def inner(c, ixs):
+            lp, st = ixs
+            y, new_st = _mamba_layer(lp, cfg, c, st)
+            return y, new_st
+
+        if gstate is None:
+            def inner_nc(c, lp):
+                y, _ = inner(c, (lp, None))
+                return y, None
+            xc, new_gstate = jax.lax.scan(inner_nc, xc, gp)
+        else:
+            xc, new_gstate = jax.lax.scan(inner, xc, (gp, gstate))
+        xc, new_kv = _shared_block(params["shared"], cfg, xc, positions, policy,
+                                   ckv, cache_pos)
+        xc = policy.constrain(xc, "resid")
+        return xc, (new_gstate, new_kv)
+
+    if remat == "full":
+        group_body = jax.checkpoint(
+            group_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if has_cache:
+        x, (new_gstates, new_kvs) = jax.lax.scan(
+            group_body, x, (params["groups"], gstates,
+                            (cache["kv_k"], cache["kv_v"])), unroll=_unroll())
+        new_cache = {
+            "groups": jax.tree.map(
+                lambda s: s.reshape(n_grp * per, *s.shape[2:]), new_gstates),
+            "kv_k": new_kvs[0], "kv_v": new_kvs[1],
+        }
+    else:
+        def group_body_nc(carry, gp):
+            y, _ = group_body(carry, (gp, None, None))
+            return y, None
+        x, _ = jax.lax.scan(group_body_nc, x, params["groups"], unroll=_unroll())
+        new_cache = None
+
+    if rem:
+        def tail_body(c, ixs):
+            if has_cache:
+                lp, st = ixs
+            else:
+                lp, st = ixs, None
+            return _mamba_layer(lp, cfg, c, st)
+        if has_cache:
+            x, new_tail = jax.lax.scan(tail_body, x, (params["tail"], cache["tail"]))
+            new_cache["tail"] = new_tail
+        else:
+            x, _ = jax.lax.scan(lambda c, lp: (tail_body(c, lp)[0], None),
+                                x, params["tail"])
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["unembed"], new_cache
+
+def _unroll():
+    """Probe hook: REPRO_SCAN_UNROLL=1 unrolls layer scans so cost_analysis
+    counts every layer (DESIGN.md §4). Trace-time env read."""
+    import os
+    return True if os.environ.get("REPRO_SCAN_UNROLL") else 1

@@ -1,0 +1,307 @@
+"""State-space blocks: Mamba2 (SSD chunked form) and xLSTM (mLSTM/sLSTM).
+
+The SSD implementation follows the minimal reference from the Mamba2 paper,
+expressed with chunk-batched matmuls + a quadratic-in-chunks inter-chunk
+combine (chunk counts are small). No sequential ``lax.scan`` over time in the
+train/prefill path, so XLA ``cost_analysis`` counts FLOPs exactly (see
+DESIGN.md §4). Decode is an O(1) single-step state update.
+
+mLSTM reuses SSD (it is linear attention with per-head scalar decay, with the
+normalizer tracked as an extra ones-column on V). sLSTM is inherently
+sequential and uses ``lax.scan`` over time (noted in DESIGN.md; its FLOPs are
+negligible at 125M scale).
+
+Simplification (documented): mLSTM/sLSTM use sigmoid input gates instead of
+the paper's exp-gate + m-stabilizer; structure/FLOPs are unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm
+
+SSD_CHUNK = 256
+
+
+# ================================================================= SSD core
+def segsum(x):
+    """x: (..., T) -> (..., T, T); out[..., i, j] = sum_{k=j+1..i} x_k (j<=i)."""
+    T = x.shape[-1]
+    rep = jnp.broadcast_to(x[..., :, None], (*x.shape, T))
+    lower = jnp.tril(jnp.ones((T, T), bool), -1)
+    s = jnp.cumsum(jnp.where(lower, rep, 0.0), axis=-2)
+    return jnp.where(jnp.tril(jnp.ones((T, T), bool)), s, -jnp.inf)
+
+
+def ssd(x, a, b, c, chunk=SSD_CHUNK, initial_state=None):
+    """Chunked state-space duality scan.
+
+    x: (B, T, H, P)   inputs (already dt-scaled for mamba; i-gated v for mLSTM)
+    a: (B, T, H)      log-decay per step (<= 0)
+    b: (B, T, N) or (B, T, H, N)   input maps (shared across heads or per-head)
+    c: (B, T, N) or (B, T, H, N)   output maps
+    Returns (y (B,T,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, T, H, Pd = x.shape
+    per_head = b.ndim == 4
+    chunk = min(chunk, T)
+    assert T % chunk == 0
+    nC = T // chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(Bsz, nC, chunk, H, Pd).astype(f32)
+    ac = jnp.moveaxis(a.reshape(Bsz, nC, chunk, H), -1, -2).astype(f32)  # (B, nC, H, chunk)
+    a_cum = jnp.cumsum(ac, axis=-1)
+
+    if per_head:
+        bc = b.reshape(Bsz, nC, chunk, H, -1).astype(f32)
+        cc = c.reshape(Bsz, nC, chunk, H, -1).astype(f32)
+        s_diag = jnp.einsum("bclhn,bcshn->bchls", cc, bc)
+    else:
+        bc = b.reshape(Bsz, nC, chunk, -1).astype(f32)
+        cc = c.reshape(Bsz, nC, chunk, -1).astype(f32)
+        s_diag = jnp.einsum("bcln,bcsn->bcls", cc, bc)[:, :, None]
+
+    L = jnp.exp(segsum(ac))  # (B, nC, H, chunk, chunk)
+    w = s_diag * L  # broadcast over H when shared
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", w, xc)
+
+    # per-chunk aggregated states: (B, nC, H, P, N)
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)  # (B,nC,H,chunk)
+    if per_head:
+        states = jnp.einsum("bcshn,bchs,bcshp->bchpn", bc, decay_states, xc)
+    else:
+        states = jnp.einsum("bcsn,bchs,bcshp->bchpn", bc, decay_states, xc)
+
+    # inter-chunk recurrence (quadratic in nC; nC is small)
+    if initial_state is None:
+        initial_state = jnp.zeros((Bsz, H, Pd, states.shape[-1]), f32)
+    states = jnp.concatenate([initial_state[:, None], states], axis=1)  # (B,nC+1,H,P,N)
+    chunk_sums = jnp.pad(a_cum[..., -1], ((0, 0), (1, 0), (0, 0)))  # (B,nC+1,H)
+    decay_chunk = jnp.exp(segsum(jnp.moveaxis(chunk_sums, -1, 1)))  # (B,H,nC+1,nC+1)
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # state -> output
+    out_decay = jnp.exp(a_cum)  # (B,nC,H,chunk)
+    if per_head:
+        y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp", cc, prev_states, out_decay)
+    else:
+        y_off = jnp.einsum("bcln,bchpn,bchl->bclhp", cc, prev_states, out_decay)
+
+    y = (y_diag + y_off).reshape(Bsz, T, H, Pd)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_step(state, x, a, b, c):
+    """Single decode step. state: (B,H,P,N); x: (B,H,P); a: (B,H);
+    b, c: (B,N) or (B,H,N). Returns (y (B,H,P), new_state)."""
+    f32 = jnp.float32
+    state = state.astype(f32)
+    decay = jnp.exp(a.astype(f32))[..., None, None]
+    if b.ndim == 2:
+        add = jnp.einsum("bhp,bn->bhpn", x.astype(f32), b.astype(f32))
+        new = decay * state + add
+        y = jnp.einsum("bhpn,bn->bhp", new, c.astype(f32))
+    else:
+        add = jnp.einsum("bhp,bhn->bhpn", x.astype(f32), b.astype(f32))
+        new = decay * state + add
+        y = jnp.einsum("bhpn,bhn->bhp", new, c.astype(f32))
+    return y.astype(x.dtype), new
+
+
+# ================================================================= conv
+def causal_conv(x, w, conv_state=None):
+    """Depthwise causal conv. x: (B, T, C); w: (K, C).
+
+    conv_state: (B, K-1, C) previous inputs (decode) or None (zero history).
+    Returns (y (B,T,C), new_state (B, K-1, C)).
+    """
+    B, T, C = x.shape
+    K = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, C), x.dtype)
+    ext = jnp.concatenate([conv_state, x], axis=1)  # (B, K-1+T, C)
+    y = sum(ext[:, k:k + T] * w[k] for k in range(K))
+    return y, ext[:, T:]
+
+
+# ================================================================= mamba2
+def init_mamba_params(key, cfg, dtype):
+    """Projections are kept as separate matrices (w_z / w_xbc / w_dt) so each
+    can carry its own TP sharding (a fused in_proj would shard across
+    semantic component boundaries)."""
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    h = cfg.n_ssm_heads
+    ks = jax.random.split(key, 5)
+    conv_ch = di + 2 * n
+    return {
+        "w_z": dense_init(ks[0], (d, di), 0, dtype),
+        "w_xbc": dense_init(ks[1], (d, conv_ch), 0, dtype),
+        "w_dt": dense_init(ks[3], (d, h), 0, dtype),
+        "conv_w": dense_init(ks[4], (cfg.ssm_conv, conv_ch), 0, dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),       # A = -exp(a_log) = -1
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), 0, dtype),
+    }
+
+
+def _mamba_inner(params, cfg, u):
+    """Shared projection/gate logic. u: (B, T, d_model)."""
+    z = u @ params["w_z"]
+    xBC = u @ params["w_xbc"]
+    dt_raw = u @ params["w_dt"]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,T,h)
+    return z, xBC, dt
+
+
+def mamba_block(params, cfg, u, state=None):
+    """u: (B, T, d). state: None or dict(conv=(B,K-1,C), ssm=(B,H,P,N)).
+
+    Returns (out (B,T,d), new_state dict).
+    """
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    p = cfg.ssm_head_dim
+    B_, T, _ = u.shape
+    z, xBC, dt = _mamba_inner(params, cfg, u)
+    conv_state = state["conv"] if state is not None else None
+    xBC, new_conv = causal_conv(xBC, params["conv_w"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    x, b, c = jnp.split(xBC, [di, di + n], axis=-1)
+    x = x.reshape(B_, T, h, p)
+    A = -jnp.exp(params["a_log"])  # (h,)
+    a = dt * A  # (B,T,h) log-decay
+    xdt = x * dt[..., None].astype(x.dtype)
+
+    if T == 1 and state is not None:
+        y, new_ssm = ssd_step(state["ssm"], xdt[:, 0], a[:, 0], b[:, 0], c[:, 0])
+        y = y[:, None]
+    else:
+        init = state["ssm"] if state is not None else None
+        y, new_ssm = ssd(xdt, a, b, c, initial_state=init)
+    y = y + x * params["d_skip"][:, None].astype(x.dtype)
+    y = y.reshape(B_, T, di)
+    y = rmsnorm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
+def init_mamba_state(cfg, batch, dtype=jnp.float32):
+    di, n = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * n), jnp.bfloat16),
+        "ssm": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, n), dtype),
+    }
+
+
+# ================================================================= mLSTM
+def init_mlstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    hd = cfg.ssm_head_dim
+    h = di // hd
+    ks = jax.random.split(key, 6)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * di), 0, dtype),
+        "wq": dense_init(ks[1], (di, di), 0, dtype),
+        "wk": dense_init(ks[2], (di, di), 0, dtype),
+        "wv": dense_init(ks[3], (di, di), 0, dtype),
+        "w_gates": dense_init(ks[4], (di, 2 * h), 0, dtype),
+        "out_norm": jnp.ones((di,), dtype),
+        "down_proj": dense_init(ks[5], (di, d), 0, dtype),
+    }
+
+
+def mlstm_block(params, cfg, u, state=None):
+    """u: (B,T,d). state: None or (B,H,hd,hd+1) matrix memory (+norm col)."""
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    hd = cfg.ssm_head_dim
+    h = di // hd
+    B_, T, _ = u.shape
+    up = u @ params["up_proj"]
+    xin, z = jnp.split(up, 2, axis=-1)
+    q = (xin @ params["wq"]).reshape(B_, T, h, hd) * hd ** -0.5
+    k = (xin @ params["wk"]).reshape(B_, T, h, hd)
+    v = (xin @ params["wv"]).reshape(B_, T, h, hd)
+    gates = xin @ params["w_gates"]  # (B,T,2h)
+    i_g = jax.nn.sigmoid(gates[..., :h].astype(jnp.float32))
+    logf = jax.nn.log_sigmoid(gates[..., h:].astype(jnp.float32))  # (B,T,h) <= 0
+
+    k_gated = k * i_g[..., None].astype(k.dtype)
+    v_aug = jnp.concatenate([v, jnp.ones((B_, T, h, 1), v.dtype)], axis=-1)
+
+    if T == 1 and state is not None:
+        y_aug, new_state = ssd_step(state, v_aug[:, 0], logf[:, 0],
+                                    k_gated[:, 0], q[:, 0])
+        y_aug = y_aug[:, None]
+    else:
+        y_aug, new_state = ssd(v_aug, logf, k_gated, q, initial_state=state)
+    y, norm = y_aug[..., :hd], y_aug[..., hd:]
+    y = y / jnp.maximum(jnp.abs(norm), 1.0)
+    y = y.reshape(B_, T, di)
+    y = rmsnorm(y * jax.nn.silu(z), params["out_norm"], cfg.norm_eps)
+    return y @ params["down_proj"], new_state
+
+
+def init_mlstm_state(cfg, batch):
+    di = cfg.ssm_expand * cfg.d_model
+    hd = cfg.ssm_head_dim
+    return jnp.zeros((batch, di // hd, hd + 1, hd), jnp.float32)
+
+
+# ================================================================= sLSTM
+def init_slstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    h = d // hd if d % hd == 0 else cfg.n_heads
+    hd = d // h
+    f = max(1, int(d * 4 / 3))
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], (d, 4 * d), 0, dtype),
+        "r": dense_init(ks[1], (h, hd, 4 * hd), (1,), dtype),
+        "ffn_up": dense_init(ks[2], (d, f), 0, dtype),
+        "ffn_down": dense_init(ks[3], (f, d), 0, dtype),
+    }
+
+
+def slstm_block(params, cfg, u, state=None):
+    """sLSTM with block-diagonal recurrence; sequential scan over T.
+
+    state: None or dict(c,n,y) each (B, d). Returns (out, new_state).
+    """
+    d = cfg.d_model
+    h = params["r"].shape[0]
+    hd = d // h
+    B_, T, _ = u.shape
+    wx = (u @ params["w_in"]).reshape(B_, T, 4, d)  # preact (z,i,f,o)
+
+    if state is None:
+        state = {k: jnp.zeros((B_, d), jnp.float32) for k in ("c", "n", "y")}
+
+    def step(carry, wx_t):
+        c, n, y = carry
+        # recurrent contribution: block-diag per head
+        yh = y.reshape(B_, h, hd)
+        rec = jnp.einsum("bhe,hef->bhf", yh.astype(params["r"].dtype),
+                         params["r"]).reshape(B_, h, 4, hd)
+        rec = jnp.moveaxis(rec, 1, 2).reshape(B_, 4, d).astype(jnp.float32)
+        pre = wx_t.astype(jnp.float32) + rec
+        z = jnp.tanh(pre[:, 0])
+        i = jax.nn.sigmoid(pre[:, 1])
+        f = jax.nn.sigmoid(pre[:, 2])
+        o = jax.nn.sigmoid(pre[:, 3])
+        c = f * c + i * z
+        n = f * n + i
+        y = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, y), y
+
+    (c, n, y), ys = jax.lax.scan(
+        step, (state["c"], state["n"], state["y"]), jnp.moveaxis(wx, 1, 0))
+    out = jnp.moveaxis(ys, 0, 1).astype(u.dtype)  # (B,T,d)
+    out = out + jax.nn.gelu(out @ params["ffn_up"]) @ params["ffn_down"]
+    return out, {"c": c, "n": n, "y": y}

@@ -1,0 +1,157 @@
+"""Unified decoder-only LM covering the dense / moe / vlm / audio families.
+
+Layers are scanned with stacked parameters (MaxText-style) so the HLO stays
+O(1) in depth; remat policy is configurable. The vlm/audio modality frontends
+are stubs per the assignment card: precomputed vision embeddings / EnCodec
+token ids arrive via ``input_specs``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp
+from repro.models.common import NoPolicy, dense_init, dtype_of, rmsnorm, sinusoidal_positions
+
+
+# ---------------------------------------------------------------- params
+def init_layer_params(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attn_params(ks[0], cfg, dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = mlp.init_moe_params(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = mlp.init_ffn_params(ks[1], cfg, dtype)
+    return p
+
+
+def init_params(cfg, key):
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer_params(k, cfg, dtype))(layer_keys)
+    if cfg.n_codebooks:
+        embed = dense_init(ks[1], (cfg.n_codebooks, cfg.vocab, cfg.d_model), 2, dtype)
+    else:
+        embed = dense_init(ks[1], (cfg.vocab, cfg.d_model), 1, dtype)
+    p = {"embed": embed, "layers": layers, "final_norm": jnp.ones((cfg.d_model,), dtype)}
+    if not cfg.tie_embeddings:
+        if cfg.n_codebooks:
+            p["unembed"] = dense_init(ks[2], (cfg.n_codebooks, cfg.d_model, cfg.vocab), 1, dtype)
+        else:
+            p["unembed"] = dense_init(ks[2], (cfg.d_model, cfg.vocab), 0, dtype)
+    return p
+
+
+# ---------------------------------------------------------------- cache
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, max_seq, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------- embed/head
+def embed_tokens(params, cfg, tokens):
+    if cfg.n_codebooks:
+        # tokens: (B, T, nq); params['embed']: (nq, V, d) -> summed embeddings
+        out = 0
+        for q in range(cfg.n_codebooks):
+            out = out + jnp.take(params["embed"][q], tokens[..., q], axis=0)
+        return out
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def logits_head(params, cfg, x, policy):
+    if cfg.n_codebooks:
+        logits = jnp.einsum("btd,qdv->btqv", x, params["unembed"])
+    elif cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["unembed"]
+    return policy.constrain(logits, "logits")
+
+
+# ---------------------------------------------------------------- layer body
+def layer_body(lp, cfg, x, positions, policy, cache_kv, cache_pos):
+    """One transformer layer. cache_kv: (k, v) for this layer or None."""
+    cache = None if cache_kv is None else {"k": cache_kv[0], "v": cache_kv[1]}
+    h, cache = attn.attention_block(
+        lp["attn"], cfg, rmsnorm(x, lp["ln1"], cfg.norm_eps), positions, policy,
+        cache=cache, cache_pos=cache_pos)
+    x = x + h
+    hin = rmsnorm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        h = mlp.moe_block(lp["moe"], cfg, hin, policy)
+    else:
+        h = mlp.ffn(lp["ffn"], cfg, hin, policy)
+    x = policy.constrain(x + h, "resid")
+    new_kv = None if cache is None else (cache["k"], cache["v"])
+    return x, new_kv
+
+
+# ---------------------------------------------------------------- forward
+def forward(params, cfg, batch, policy=None, cache=None, cache_pos=None,
+            remat="none"):
+    """Returns (logits, new_cache).
+
+    batch: dict with "tokens" (B,T) or (B,T,nq); optionally "vision_embeds"
+    (B,nvis,d) and "positions" ((3,B,T) for mrope). cache: stacked KV dict.
+    """
+    policy = policy or NoPolicy()
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    x = embed_tokens(params, cfg, tokens)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x], axis=1)
+    T = x.shape[1]
+
+    if cfg.pos == "mrope":
+        positions = batch["positions"]  # (3, B, T)
+    elif cfg.pos == "sin":
+        base = cache_pos if cache_pos is not None else 0
+        pos_ids = base + jnp.arange(T)[None, :]
+        x = x + sinusoidal_positions(pos_ids, cfg.d_model).astype(x.dtype)
+        positions = pos_ids * jnp.ones((B, 1), jnp.int32)
+    else:
+        base = cache_pos if cache_pos is not None else 0
+        positions = (base + jnp.arange(T)[None, :]) * jnp.ones((B, 1), jnp.int32)
+
+    x = policy.constrain(x, "resid")
+
+    def body(carry, xs):
+        xc = carry
+        lp, ckv = xs
+        return layer_body(lp, cfg, xc, positions, policy, ckv, cache_pos)
+
+    if remat == "full":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if cache is not None:
+        x, new_kv = jax.lax.scan(body, x, (params["layers"], (cache["k"], cache["v"])),
+                                 unroll=_unroll())
+        new_cache = {"k": new_kv[0], "v": new_kv[1]}
+    else:
+        def body_nc(carry, lp):
+            y, _ = body(carry, (lp, None))
+            return y, None
+        x, _ = jax.lax.scan(body_nc, x, params["layers"], unroll=_unroll())
+        new_cache = None
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return logits_head(params, cfg, x, policy), new_cache
+
+def _unroll():
+    """Probe hook: REPRO_SCAN_UNROLL=1 unrolls layer scans so cost_analysis
+    counts every layer (DESIGN.md §4). Trace-time env read."""
+    import os
+    return True if os.environ.get("REPRO_SCAN_UNROLL") else 1

@@ -1,0 +1,93 @@
+"""xLSTM LM: alternating mLSTM (even) / sLSTM (odd) residual blocks.
+
+Blocks carry their own internal projections (d_ff=0 on the card). The two
+block kinds have different parameter trees, so we scan over *pairs*
+(mLSTM + sLSTM) with stacked pair parameters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.common import NoPolicy, dense_init, dtype_of, rmsnorm
+
+
+def _n_pairs(cfg):
+    assert cfg.n_layers % 2 == 0, "xlstm config uses mLSTM/sLSTM pairs"
+    return cfg.n_layers // 2
+
+
+def init_params(cfg, key):
+    dtype = dtype_of(cfg)
+    ks = jax.random.split(key, 3)
+
+    def pair_init(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "m_ln": jnp.ones((cfg.d_model,), dtype),
+            "m": ssm.init_mlstm_params(k1, cfg, dtype),
+            "s_ln": jnp.ones((cfg.d_model,), dtype),
+            "s": ssm.init_slstm_params(k2, cfg, dtype),
+        }
+
+    return {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), 1, dtype),
+        "pairs": jax.vmap(pair_init)(jax.random.split(ks[1], _n_pairs(cfg))),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }
+
+
+def init_cache(cfg, batch, max_seq=None, dtype=jnp.float32):  # noqa: ARG001
+    n = _n_pairs(cfg)
+    m = ssm.init_mlstm_state(cfg, batch)
+    return {
+        "m": jnp.broadcast_to(m, (n, *m.shape)),
+        "s": {k: jnp.zeros((n, batch, cfg.d_model), jnp.float32)
+              for k in ("c", "n", "y")},
+    }
+
+
+def forward(params, cfg, batch, policy=None, cache=None, cache_pos=None,
+            remat="none"):
+    policy = policy or NoPolicy()
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = policy.constrain(x, "resid")
+    has_cache = cache is not None
+
+    def pair_body(carry, xs):
+        xc = carry
+        pp, mstate, sstate = xs
+        h, new_m = ssm.mlstm_block(pp["m"], cfg, rmsnorm(xc, pp["m_ln"], cfg.norm_eps),
+                                   mstate)
+        xc = xc + h
+        h, new_s = ssm.slstm_block(pp["s"], cfg, rmsnorm(xc, pp["s_ln"], cfg.norm_eps),
+                                   sstate)
+        xc = policy.constrain(xc + h, "resid")
+        return xc, (new_m, new_s)
+
+    if remat == "full":
+        pair_body = jax.checkpoint(
+            pair_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    if has_cache:
+        x, (new_m, new_s) = jax.lax.scan(
+            pair_body, x, (params["pairs"], cache["m"], cache["s"]),
+            unroll=_unroll())
+        new_cache = {"m": new_m, "s": new_s}
+    else:
+        def body_nc(carry, pp):
+            y, _ = pair_body(carry, (pp, None, None))
+            return y, None
+        x, _ = jax.lax.scan(body_nc, x, params["pairs"], unroll=_unroll())
+        new_cache = None
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["embed"].T, new_cache
+
+def _unroll():
+    """Probe hook: REPRO_SCAN_UNROLL=1 unrolls layer scans so cost_analysis
+    counts every layer (DESIGN.md §4). Trace-time env read."""
+    import os
+    return True if os.environ.get("REPRO_SCAN_UNROLL") else 1

@@ -1,0 +1,84 @@
+"""Attention layer unit tests: flash-scan vs reference, caching, rope."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    attend_decode, attend_flash, attend_ref, cache_update)
+from repro.models.common import apply_mrope, apply_rope
+
+
+@pytest.mark.parametrize("T,H,KV,hd", [(256, 8, 2, 64), (128, 4, 4, 32),
+                                       (512, 6, 2, 16)])
+def test_flash_matches_ref(key, T, H, KV, hd):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, T, H, hd))
+    k = jax.random.normal(ks[1], (2, T, KV, hd))
+    v = jax.random.normal(ks[2], (2, T, KV, hd))
+    ref = attend_ref(q, k, v, causal=True)
+    out = attend_flash(q, k, v, causal=True, q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_noncausal(key):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 32))
+    k = jax.random.normal(ks[1], (1, 128, 4, 32))
+    v = jax.random.normal(ks[2], (1, 128, 4, 32))
+    ref = attend_ref(q, k, v, causal=False)
+    out = attend_flash(q, k, v, causal=False, q_chunk=32, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_matches_last_row(key):
+    """attend_decode(q_T) equals row T of full causal attention."""
+    ks = jax.random.split(key, 3)
+    B, T, H, KV, hd = 2, 12, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, KV, hd))
+    v = jax.random.normal(ks[2], (B, T, KV, hd))
+    ref = attend_ref(q, k, v, causal=True)
+    ck = jnp.zeros((B, KV, 16, hd))
+    cv = jnp.zeros((B, KV, 16, hd))
+    ck, cv = cache_update(ck, cv, k, v, 0)
+    out = attend_decode(q[:, -1:], ck, cv, T - 1)
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(ref[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rope_relative_shift_invariance(key):
+    """<rope(q,p) , rope(k,p')> depends only on p - p'."""
+    q = jax.random.normal(key, (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 64))
+
+    def score(p, pk):
+        qr = apply_rope(q, jnp.array([[p]]), 10000.0)
+        kr = apply_rope(k, jnp.array([[pk]]), 10000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(5, 3) - score(105, 103)) < 1e-3
+
+
+def test_mrope_equals_rope_when_positions_equal(key):
+    """With t==h==w position ids, M-RoPE must reduce to plain RoPE."""
+    x = jax.random.normal(key, (2, 8, 4, 64))
+    pos = jnp.broadcast_to(jnp.arange(8), (2, 8)).astype(jnp.int32)
+    pos3 = jnp.stack([pos, pos, pos])
+    a = apply_rope(x, pos, 1e6)
+    b = apply_mrope(x, pos3, 1e6)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_cache_update_at_offset(key):
+    B, KV, S, hd = 1, 2, 10, 8
+    ck = jnp.zeros((B, KV, S, hd))
+    cv = jnp.zeros((B, KV, S, hd))
+    k = jax.random.normal(key, (B, 3, KV, hd))
+    ck2, _ = cache_update(ck, cv, k, k, 4)
+    np.testing.assert_allclose(np.asarray(ck2[:, :, 4:7]),
+                               np.asarray(jnp.moveaxis(k, 1, 2)), rtol=1e-6)
+    assert float(jnp.abs(ck2[:, :, :4]).sum()) == 0

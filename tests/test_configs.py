@@ -1,0 +1,51 @@
+"""Config registry + published parameter-count sanity."""
+import pytest
+
+from repro.config import LONG_CONTEXT_ARCHS, SHAPES, cells
+from repro.configs import get_config, get_smoke_config, list_archs
+
+EXPECTED_PARAMS_B = {
+    "yi-9b": (8.0, 10.0),
+    "qwen3-14b": (13.0, 16.0),
+    "qwen3-32b": (30.0, 35.0),
+    "qwen2-0.5b": (0.4, 0.6),
+    "qwen2-vl-7b": (7.0, 8.5),
+    "musicgen-medium": (1.0, 2.0),
+    "qwen3-moe-235b-a22b": (220.0, 245.0),
+    "kimi-k2-1t-a32b": (950.0, 1100.0),
+    "zamba2-7b": (5.5, 8.5),
+    "xlstm-125m": (0.08, 0.2),
+}
+
+
+def test_ten_assigned_archs():
+    assert len(list_archs()) == 10
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_counts_match_published(arch):
+    lo, hi = EXPECTED_PARAMS_B[arch]
+    p = get_config(arch).param_count() / 1e9
+    assert lo <= p <= hi, f"{arch}: {p:.2f}B outside [{lo}, {hi}]"
+
+
+@pytest.mark.parametrize("arch", list_archs(include_paper=True))
+def test_smoke_configs_are_small(arch):
+    assert get_smoke_config(arch).param_count() < 5e6
+
+
+def test_shape_card():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+
+
+def test_cells_skip_rules():
+    cs = cells()
+    # 8 full-attention archs x 3 shapes + 2 ssm/hybrid x 4 shapes
+    assert len(cs) == 32
+    for arch, shape in cs:
+        if shape == "long_500k":
+            assert arch in LONG_CONTEXT_ARCHS

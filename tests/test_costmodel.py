@@ -1,0 +1,64 @@
+"""Cost model: profile lookup semantics and roofline classification."""
+import pytest
+
+from repro.core.costmodel import TimingEstimator
+from repro.core.profile_db import ProfileDB
+from repro.core.sublayer import Kernel
+from repro.core.system import CLI2
+
+
+@pytest.fixture
+def db():
+    db = ProfileDB()
+    # 100 Gflop/s, 10 GB/s entry -> knee at AI=10
+    db.add(db.key("cpu", "matmul", 2, 8, False), (64, 1024, 1024), 100.0, 10.0)
+    db.add(db.key("gpu", "matmul", 2, 0, False), (64, 1024, 1024), 1000.0, 100.0)
+    return db
+
+
+def test_exact_match_uses_flops(db):
+    est = TimingEstimator(db, CLI2, threads=8)
+    k = Kernel("matmul", (64, 1024, 1024), 1e9, 1e6)
+    t = est.kernel_time("cpu", k)
+    assert abs(t - 1e9 / (100.0 * 1e9)) < 1e-9
+    assert est.match_stats["exact"] == 1
+
+
+def test_partial_match_compute_bound(db):
+    est = TimingEstimator(db, CLI2, threads=8)
+    # different dims, AI = 100 >> knee 10 -> compute bound
+    k = Kernel("matmul", (128, 2048, 2048), 1e9, 1e7)
+    t = est.kernel_time("cpu", k)
+    assert abs(t - 1e9 / 100e9) < 1e-9
+    assert est.match_stats["partial"] == 1
+
+
+def test_partial_match_memory_bound(db):
+    est = TimingEstimator(db, CLI2, threads=8)
+    # AI = 0.1 << knee -> memory bound: bytes / gbps
+    k = Kernel("matmul", (1, 2048, 2048), 1e6, 1e7)
+    t = est.kernel_time("cpu", k)
+    assert abs(t - 1e7 / 10e9) < 1e-9
+
+
+def test_unknown_op_skipped(db):
+    est = TimingEstimator(db, CLI2, threads=8)
+    k = Kernel("reshape", (1, 2), 0.0, 100.0)
+    assert est.kernel_time("cpu", k) == 0.0
+    assert est.match_stats["skipped"] == 1
+
+
+def test_thread_count_relaxation(db):
+    """Planner may query unprofiled thread counts -> nearest profiled."""
+    est = TimingEstimator(db, CLI2, threads=6)
+    k = Kernel("matmul", (64, 1024, 1024), 1e9, 1e6)
+    assert est.kernel_time("cpu", k) > 0
+
+
+def test_db_roundtrip(tmp_path, db):
+    p = str(tmp_path / "prof.json")
+    db.save(p)
+    db2 = ProfileDB.load(p)
+    assert db2.stats() == db.stats()
+    hit = db2.lookup("cpu", "matmul", 2, 8, (64, 1024, 1024))
+    assert hit is not None and hit[1] == "exact"

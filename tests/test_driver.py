@@ -1,0 +1,88 @@
+"""Fault-tolerant driver: restart-from-checkpoint, stragglers, determinism."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.data import DataPipeline
+from repro.runtime import FaultInjector, TrainDriver
+
+
+def quad_pipeline():
+    class P:
+        def batch_at(self, step):
+            rng = np.random.RandomState(step)
+            return {"x": rng.randn(4).astype(np.float32)}
+    return P()
+
+
+def quad_step(state, batch):
+    """Toy quadratic descent step with a deterministic trace."""
+    w = state["w"]
+    g = w - jnp.asarray(batch["x"])
+    w = w - 0.1 * g
+    return {"w": w, "n": state["n"] + 1}, {"loss": jnp.sum(g * g),
+                                           "n": state["n"] + 1}
+
+
+def test_restart_from_fault(tmp_path):
+    state = {"w": jnp.zeros(4), "n": jnp.int32(0)}
+    drv = TrainDriver(quad_step, state, quad_pipeline(), str(tmp_path),
+                      ckpt_every=5, fault_injector=FaultInjector(fail_at=[7]))
+    log = drv.run(12)
+    kinds = [k for _, k, _ in drv.events]
+    assert "fault" in kinds and "restart" in kinds
+    assert drv.step == 12
+    # replay determinism: the final state equals an uninterrupted run
+    state2 = {"w": jnp.zeros(4), "n": jnp.int32(0)}
+    drv2 = TrainDriver(quad_step, state2, quad_pipeline(), str(tmp_path / "b"),
+                       ckpt_every=5)
+    drv2.run(12)
+    np.testing.assert_allclose(np.asarray(drv.state["w"]),
+                               np.asarray(drv2.state["w"]), rtol=1e-6)
+
+
+def test_too_many_faults_raises(tmp_path):
+    state = {"w": jnp.zeros(4), "n": jnp.int32(0)}
+    drv = TrainDriver(quad_step, state, quad_pipeline(), str(tmp_path),
+                      fault_injector=FaultInjector(fail_at=[2, 2, 2, 2]))
+    # same-step refault: injector only fires once per entry, so use distinct
+    drv.fault = FaultInjector(fail_at=[1, 2, 3, 4, 5])
+    try:
+        drv.run(10, max_restarts=3)
+        raised = False
+    except RuntimeError:
+        raised = True
+    assert raised
+
+
+def test_straggler_detection(tmp_path):
+    state = {"w": jnp.zeros(4), "n": jnp.int32(0)}
+    calls = {"n": 0}
+
+    def slow_step(s, b):
+        calls["n"] += 1
+        if calls["n"] == 9:
+            time.sleep(0.3)
+        return quad_step(s, b)
+
+    drv = TrainDriver(slow_step, state, quad_pipeline(), str(tmp_path),
+                      ckpt_every=100, straggler_factor=3.0)
+    drv.run(12)
+    assert any(k == "straggler" for _, k, _ in drv.events)
+
+
+def test_data_pipeline_determinism_and_sharding():
+    cfg = get_smoke_config("yi-9b")
+    p1 = DataPipeline(cfg, 32, 8, seed=3, process_index=0, process_count=2)
+    p2 = DataPipeline(cfg, 32, 8, seed=3, process_index=0, process_count=2)
+    b1, b2 = p1.batch_at(5), p2.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # different processes see disjoint slices
+    p3 = DataPipeline(cfg, 32, 8, seed=3, process_index=1, process_count=2)
+    b3 = p3.batch_at(5)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])

@@ -1,0 +1,83 @@
+"""Pallas kernel allclose vs pure-jnp oracles: shape/dtype sweeps in
+interpret mode (TPU is the deployment target; interpret executes the kernel
+body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref as kref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.streamed_matmul import (
+    quantize_int8, streamed_matmul, streamed_matmul_int8)
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def tol(dtype):
+    # fp32 bound covers accumulation-order differences vs the oracle
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("B,H,KV,T,hd", [
+    (1, 4, 4, 128, 64),    # MHA
+    (2, 8, 2, 256, 64),    # GQA 4x
+    (1, 6, 2, 192, 128),   # GQA 3x, odd block division
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(key, dtype, B, H, KV, T, hd, causal):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, T, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, T, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, T, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64,
+                          interpret=True)
+    ref = kref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("block_q", [32, 64, 128])
+def test_flash_q_chunk_knob(key, block_q):
+    """VLMOpt Q-chunking: results identical across chunk sizes."""
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 4, 256, 64))
+    k = jax.random.normal(ks[1], (1, 4, 256, 64))
+    v = jax.random.normal(ks[2], (1, 4, 256, 64))
+    out = flash_attention(q, k, v, causal=False, block_q=block_q,
+                          block_k=64, interpret=True)
+    ref = kref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("M,K,N,bk", [(128, 512, 256, 128),
+                                      (256, 1024, 512, 512),
+                                      (64, 256, 128, 64)])
+def test_streamed_matmul_sweep(key, dtype, M, K, N, bk):
+    ks = jax.random.split(key, 2)
+    x = jax.random.normal(ks[0], (M, K), dtype)
+    w = jax.random.normal(ks[1], (K, N), dtype)
+    out = streamed_matmul(x, w, block_m=64, block_n=64, block_k=bk,
+                          interpret=True)
+    ref = kref.streamed_matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **tol(dtype))
+
+
+def test_streamed_matmul_int8(key):
+    ks = jax.random.split(key, 2)
+    x = jax.random.normal(ks[0], (128, 512), jnp.float32)
+    w = jax.random.normal(ks[1], (512, 256), jnp.float32)
+    wq, sc = quantize_int8(w, block_k=128)
+    out = streamed_matmul_int8(x, wq, sc, block_k=128, interpret=True)
+    ref = kref.streamed_matmul_int8_ref(x, wq, sc, block_k=128)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+    # quantisation itself is within int8 error of the dense product
+    dense = np.asarray(x) @ np.asarray(w)
+    rel = np.abs(np.asarray(out) - dense).max() / np.abs(dense).max()
+    assert rel < 0.05

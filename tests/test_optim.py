@@ -1,0 +1,62 @@
+"""Optimizer + HLO analysis unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import collective_bytes
+from repro.optim import OptConfig, adamw_init, adamw_update, cosine_lr
+
+
+def test_adamw_decreases_quadratic(key):
+    oc = OptConfig(lr=0.05, weight_decay=0.0, warmup_steps=0, total_steps=1000)
+    target = jax.random.normal(key, (8, 8))
+    params = {"w": jnp.zeros((8, 8))}
+    state = adamw_init(oc, params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, _ = adamw_update(oc, g, state, params)
+    assert float(loss(params)) < 0.2 * l0
+
+
+def test_grad_clip_applied(key):
+    oc = OptConfig(lr=1e-3, clip_norm=1.0, warmup_steps=0)
+    params = {"w": jnp.zeros((4,))}
+    state = adamw_init(oc, params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = adamw_update(oc, huge, state, params)
+    assert float(metrics["grad_norm"]) > 1e5  # reported pre-clip
+
+
+def test_cosine_schedule_endpoints():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(cosine_lr(oc, 0)) == 0.0
+    assert abs(float(cosine_lr(oc, 10)) - 1.0) < 1e-6
+    assert float(cosine_lr(oc, 100)) < 1e-6
+
+
+def test_state_dtype_bf16():
+    oc = OptConfig(state_dtype="bfloat16")
+    state = adamw_init(oc, {"w": jnp.zeros((4, 4))})
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_collective_parser_counts_allreduce(key):
+    """psum over 1-device 'mesh' won't emit collectives; use a fake HLO."""
+    hlo = """
+HloModule test
+
+ENTRY %main (a: bf16[16,1024]) -> bf16[16,1024] {
+  %a = bf16[16,1024] parameter(0)
+  ROOT %ar = bf16[16,1024]{1,0} all-reduce(%a), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+    r = collective_bytes(hlo)
+    assert r["by_kind"].get("all-reduce", 0) > 0
+    # 2 * size * (n-1)/n with n=4
+    expect = 2 * 16 * 1024 * 2 * 3 / 4
+    assert abs(r["total_bytes"] - expect) < 1e-6

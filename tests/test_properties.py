@@ -1,0 +1,93 @@
+"""Hypothesis property tests on system invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.planner import TIERS, Schedule, TierEntry, pin_by_priority
+from repro.core.costmodel import Plan
+from repro.core.graphing import build_graph
+from repro.core.system import InferenceSetting
+from repro.data import DataPipeline
+from repro.kernels.streamed_matmul import quantize_int8
+from repro.models.ssm import segsum
+
+SUBS = build_graph(get_config("nemo8b"), wdtype=1)
+SETTING = InferenceSetting(batch=1, context=2048)
+
+
+@settings(max_examples=30, deadline=None)
+@given(budget=st.integers(min_value=0, max_value=40_000_000_000))
+def test_pinning_monotone_in_budget(budget):
+    """More budget never pins fewer bytes, never exceeds budget."""
+    p1, u1 = pin_by_priority(budget, SUBS, SETTING)
+    p2, u2 = pin_by_priority(budget * 2, SUBS, SETTING)
+    assert u1 <= budget
+    assert u2 >= u1
+    assert p1.issubset(p2) or u2 <= budget * 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(budget=st.integers(min_value=1_000_000, max_value=40_000_000_000))
+def test_pin_priority_closure(budget):
+    """If any FFN is pinned, KV/attention demand must have been satisfiable
+    first (priority closure within the pinned set)."""
+    pinned, _ = pin_by_priority(budget, SUBS, SETTING)
+    by_kind = {}
+    for s in SUBS:
+        by_kind.setdefault(s.kind, []).append(s)
+    if any(s.name in pinned for s in by_kind.get("ffn", [])):
+        assert all(s.name in pinned for s in by_kind.get("attn", []))
+
+
+@settings(max_examples=25, deadline=None)
+@given(tokens=st.integers(min_value=1, max_value=100_000),
+       times=st.lists(st.floats(min_value=1e-6, max_value=10.0),
+                      min_size=len(TIERS), max_size=len(TIERS)))
+def test_tier_picker_argmin(tokens, times):
+    entries = {t: TierEntry(Plan(name="x", placements=[]), tm)
+               for t, tm in zip(TIERS, times)}
+    sched = Schedule(tiers=entries, pinned_bytes=0, scratch_bytes=0,
+                     budget_bytes=0)
+    t = sched.pick_tier(tokens)
+    cost = math.ceil(tokens / t) * entries[t].est_time
+    best = min(math.ceil(tokens / o) * entries[o].est_time for o in TIERS)
+    assert cost <= best + 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**20),
+       step=st.integers(min_value=0, max_value=50))
+def test_pipeline_step_addressable(seed, step):
+    cfg = get_config("qwen2-0.5b").replace(vocab=256)
+    p = DataPipeline(cfg, 16, 4, seed=seed, process_index=0, process_count=1)
+    a = p.batch_at(step)
+    b = p.batch_at(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 256
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.integers(min_value=1, max_value=4))
+def test_quantize_roundtrip_bound(k):
+    key = jax.random.PRNGKey(k)
+    w = jax.random.normal(key, (256, 64), jnp.float32)
+    wq, sc = quantize_int8(w, block_k=64)
+    wt = np.asarray(wq).reshape(4, 64, 64).astype(np.float32) * np.asarray(sc)
+    err = np.abs(wt.reshape(256, 64) - np.asarray(w))
+    bound = np.repeat(np.asarray(sc)[:, 0], 64, axis=0)  # one LSB per entry
+    assert (err <= bound + 1e-6).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(min_value=2, max_value=12))
+def test_segsum_telescoping(n):
+    """exp(segsum) rows must telescope: L[i,j] == L[i,k] * L[k,j] (j<=k<=i)."""
+    key = jax.random.PRNGKey(n)
+    x = -jnp.abs(jax.random.normal(key, (n,)))
+    L = np.asarray(jnp.exp(segsum(x)))
+    i, k, j = n - 1, n // 2, 0
+    np.testing.assert_allclose(L[i, j], L[i, k] * L[k, j], rtol=1e-4)

@@ -1,0 +1,54 @@
+"""int8 expert-quantised serving mode (EXPERIMENTS.md §Perf C2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+
+
+def test_int8_experts_close_to_bf16(key):
+    """Single-block comparison: the fp32 router is identical, so routing
+    matches and only the expert matmuls carry int8 error. (A full-model
+    comparison is meaningless on random weights — near-tied router logits
+    flip expert choices under any perturbation.)"""
+    from repro.models import mlp
+    from repro.models.common import NoPolicy
+    cfg = get_smoke_config("qwen30b-a3b")
+    cfg8 = cfg.replace(expert_quant="int8")
+    p = mlp.init_moe_params(key, cfg, jnp.bfloat16)
+    p8 = mlp.init_moe_params(key, cfg8, jnp.bfloat16)
+    np.testing.assert_array_equal(np.asarray(p["router"]),
+                                  np.asarray(p8["router"]))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model),
+                          jnp.bfloat16)
+    a = np.asarray(mlp.moe_ffn(p, cfg, x, NoPolicy()), np.float32)
+    b = np.asarray(mlp.moe_ffn(p8, cfg8, x, NoPolicy()), np.float32)
+    rel = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert rel < 0.1, f"int8 deviates {rel}"
+
+
+def test_int8_param_tree_has_scales(key):
+    cfg = get_smoke_config("qwen3-moe-235b-a22b").replace(expert_quant="int8")
+    params = build_model(cfg).init(key)
+    lp = params["layers"]["moe"]
+    assert lp["w_gate"].dtype == jnp.int8
+    assert "s_gate" in lp and lp["s_gate"].dtype == jnp.float32
+    assert lp["s_gate"].shape[-3:] == (cfg.moe.n_experts, 1, 1)
+
+
+def test_int8_decode_consistency(key):
+    cfg = get_smoke_config("qwen30b-a3b").replace(expert_quant="int8")
+    model = build_model(cfg)
+    params = model.init(key)
+    B, T = 2, 8
+    tokens = jax.random.randint(key, (B, T), 0, cfg.vocab)
+    ref, _ = model.apply(params, {"tokens": tokens})
+    cache = model.init_cache(B, 16)
+    _, cache = model.prefill(params, {"tokens": tokens[:, :-1]}, cache)
+    dec, _ = model.decode_step(params, {"tokens": tokens[:, -1:]}, cache,
+                               jnp.int32(T - 1))
+    a = np.asarray(ref[:, -1], np.float32)
+    b = np.asarray(dec[:, -1], np.float32)
+    err = np.abs(a - b).max() / (np.abs(a).max() + 1e-9)
+    assert err < 0.05

@@ -1,0 +1,65 @@
+"""End-to-end behaviour tests: train a tiny LM for real and serve it under a
+pipelined-sharding budget — the full system path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (CLI2, InferenceSetting, PipelinedExecutor,
+                        TimingEstimator, build_graph, build_schedule,
+                        run_install)
+from repro.data import DataPipeline
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import OptConfig, adamw_init
+from repro.runtime import TrainDriver, FaultInjector
+
+
+@pytest.mark.slow
+def test_train_loss_decreases_and_survives_fault(tmp_path):
+    cfg = get_smoke_config("yi-9b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    oc = OptConfig(lr=3e-3, warmup_steps=5, total_steps=200, weight_decay=0.0)
+    opt_state = adamw_init(oc, params)
+    raw_step = make_train_step(cfg, policy=None, oc=oc, remat="none")
+    jitted = jax.jit(raw_step)
+
+    def step_fn(state, batch):
+        b = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, metrics = jitted(state["params"], state["opt"], b)
+        return {"params": p, "opt": o}, metrics
+
+    pipe = DataPipeline(cfg, seq_len=32, global_batch=8, seed=0,
+                        process_index=0, process_count=1)
+    drv = TrainDriver(step_fn, {"params": params, "opt": opt_state}, pipe,
+                      str(tmp_path), ckpt_every=20,
+                      fault_injector=FaultInjector(fail_at=[33]))
+    log = drv.run(60)
+    losses = [m["loss"] for m in log]
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    assert last < first * 0.9, f"loss did not decrease: {first} -> {last}"
+    assert any(k == "restart" for _, k, _ in drv.events)
+
+
+@pytest.mark.slow
+def test_serve_under_budget_end_to_end():
+    """Train-free serving check: plan at a small budget, execute, sane output."""
+    cfg = get_smoke_config("qwen30b-a3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    db = run_install(CLI2, quick=True)
+    subs = build_graph(cfg, wdtype=2)
+    est = TimingEstimator(db, CLI2)
+    total = sum(s.weight_bytes for s in subs)
+    sched = build_schedule(int(total * 0.3), subs, est,
+                           InferenceSetting(batch=2, context=64))
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=64)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (2, 12), 0, cfg.vocab)
+    last, kv, pos = ex.prefill(tokens)
+    gen, _ = ex.decode(jnp.argmax(last, -1).astype(jnp.int32), kv, pos, steps=5)
+    assert gen.shape == (2, 5)
+    assert (gen >= 0).all() and (gen < cfg.vocab).all()
+    # both engines/tiers exercised across prefill+decode at this budget
+    assert ex.stats.streamed_bytes > 0 or ex.stats.engine_calls["cpu"] > 0

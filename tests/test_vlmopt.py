@@ -1,0 +1,51 @@
+"""VLMOpt: VRAM-demand model invariants + runnable flash vision encoder."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.vlmopt import (
+    VisionConfig, init_vision_params, n_vision_tokens, vision_encode,
+    vision_vram_demand, vlm_peak_vram)
+
+VC = VisionConfig()
+
+
+def test_flash_reduces_attn_memory():
+    for res in ("480p", "1080p", "1440p"):
+        full = vision_vram_demand(VC, res, offload=False, flash=False)
+        flash = vision_vram_demand(VC, res, offload=True, flash=True)
+        assert flash < full
+    # 1440p full attention is the paper's multi-GB KQ blow-up
+    n = n_vision_tokens(VC, "1440p")
+    assert 2 * VC.heads * n * n * 4 > 4e9
+
+
+def test_q_chunking_bounds_vision_vram():
+    """Paper: Q-chunking brings 1440p vision VRAM under 2 GB."""
+    d = vision_vram_demand(VC, "1440p", offload=True, flash=True, q_chunk=1024)
+    assert d < 2e9
+
+
+def test_overlap_avoidance_peak_is_max():
+    lang = int(6e9)
+    v = vision_vram_demand(VC, "1080p", offload=True, flash=True)
+    assert vlm_peak_vram(VC, "1080p", lang, vlmopt=True) == max(v, lang)
+    assert vlm_peak_vram(VC, "1080p", lang, vlmopt=False) > lang
+
+
+def test_vram_demand_monotone_in_resolution():
+    for opt in (True, False):
+        ds = [vlm_peak_vram(VC, r, int(1e9), vlmopt=opt)
+              for r in ("480p", "720p", "1080p", "1440p")]
+        assert all(a <= b for a, b in zip(ds, ds[1:]))
+
+
+def test_vision_encoder_flash_matches_ref(key):
+    vc = VisionConfig(d=64, layers=2, heads=4)
+    params = init_vision_params(key, vc, jnp.float32)
+    patches = jax.random.normal(key, (2, 128, vc.d), jnp.float32)
+    ref = vision_encode(params, vc, patches, flash=False)
+    out = vision_encode(params, vc, patches, flash=True, q_chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
