@@ -1,10 +1,12 @@
 """Pipelined sharding — the paper's contribution as a composable module."""
 from repro.core.costmodel import Placement, Plan, TimingEstimator  # noqa: F401
-from repro.core.executor import PipelinedExecutor  # noqa: F401
+from repro.core.engine import SubLayerEngine  # noqa: F401
+from repro.core.executor import ExecStats, PipelinedExecutor  # noqa: F401
 from repro.core.graphing import ShardDiv, build_graph  # noqa: F401
 from repro.core.install import run_install  # noqa: F401
 from repro.core.planner import (  # noqa: F401
     TIERS, Schedule, build_schedule, estimate_tps, estimate_ttft)
+from repro.core.prefetch import PrefetchEngine, PrefetchStats  # noqa: F401
 from repro.core.profile_db import ProfileDB  # noqa: F401
 from repro.core.system import (  # noqa: F401
     CLI1, CLI2, CLI3, SYSTEMS, TPU_V5E, InferenceSetting, SystemConfig)

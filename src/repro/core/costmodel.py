@@ -45,6 +45,18 @@ class Plan:
     est_time: float = 0.0
     detail: dict = field(default_factory=dict)
 
+    def stream_order(self) -> List[Placement]:
+        """Streamed compute sub-layers in execution order — the exact queue
+        the weight-prefetch engine walks (placements are emitted in the
+        model's execution order by ``build_graph``)."""
+        return [p for p in self.placements
+                if p.streamed and p.engine == "gpu"
+                and p.sub.kind in ("attn", "ffn", "moe", "mamba")]
+
+    def streamed_weight_bytes(self) -> int:
+        """Plan-accounted bytes one full pass streams across the link."""
+        return sum(p.sub.weight_bytes for p in self.stream_order())
+
 
 class TimingEstimator:
     def __init__(self, db: ProfileDB, system: SystemConfig,

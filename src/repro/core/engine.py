@@ -1,0 +1,144 @@
+"""Jitted sub-layer engine: per-(kind, shape) compiled step functions.
+
+The seed executor dispatched ``attention_block``/``ffn``/``moe_ffn`` eagerly
+per sub-layer call, rebuilding host trees and re-tracing nothing-in-common
+graphs every chunk and decode step. This engine compiles one step function
+per sub-layer *kind*; ``jax.jit``'s executable cache then keys on the
+(tier, batch) activation shapes, so every layer, chunk and decode step of a
+given shape reuses one executable:
+
+- the layer index, cache position and weights are *traced* arguments (the
+  per-layer weight trees share shapes, so they hit the same executable);
+- KV caches are stacked ``(n_layers, B, KV, S, hd)`` arrays read with
+  ``dynamic_index_in_dim`` and written back with
+  ``dynamic_update_index_in_dim`` — no per-layer Python lists, no host tree
+  rebuilds inside the decode loop;
+- chunked prefill uses ``attend_cached`` (cache-wide mask, shapes
+  independent of position), decode (T==1) uses ``attend_decode``.
+
+``trace_counts`` increments only while tracing, so tests can assert that
+decode steps stop re-tracing after the first step.
+
+Streamed dense FFN sub-layers can route their matmuls through the Pallas
+``streamed_matmul`` kernel (the HBM->VMEM double-buffered DMA pipeline that
+mirrors the paper's PCIe->VRAM scratch double-buffer one level down). That
+path is on by default on TPU backends when block shapes divide; elsewhere it
+would run the kernel interpreter per matmul, so it must be opted into with
+``REPRO_STREAMED_FFN=1`` (tests do, for numerics).
+"""
+from __future__ import annotations
+
+import functools
+import os
+from collections import Counter
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.streamed_matmul import streamed_matmul
+from repro.models import attention as attn_mod
+from repro.models import mlp as mlp_mod
+from repro.models.common import NoPolicy, rmsnorm
+
+
+def _blocks_divide(dim: int, block: int) -> bool:
+    """streamed_matmul clamps each block to min(block, dim); the clamped
+    block must then divide the dim exactly."""
+    return dim % min(block, dim) == 0
+
+
+class SubLayerEngine:
+    """Compiled sub-layer step functions shared across layers/chunks/steps."""
+
+    def __init__(self, cfg, policy=None, use_streamed_mm=None):
+        self.cfg = cfg
+        self.policy = policy or NoPolicy()
+        self.trace_counts = Counter()
+        if use_streamed_mm is None:
+            use_streamed_mm = (jax.default_backend() == "tpu"
+                               or os.environ.get("REPRO_STREAMED_FFN") == "1")
+        self.use_streamed_mm = use_streamed_mm
+        self._mm_interpret = jax.default_backend() != "tpu"
+        # donate the KV stacks on accelerators so the per-layer cache update
+        # is in-place; CPU ignores donation (and would warn), so skip there
+        donate = (2, 3) if jax.default_backend() != "cpu" else ()
+        self.attn_step = jax.jit(self._attn_step, donate_argnums=donate)
+        self.ffn_step = jax.jit(self._ffn_step, static_argnames=("streamed",))
+        self.moe_step = jax.jit(self._moe_step)
+        self.embed_step = jax.jit(self._embed_step)
+        self.head_step = jax.jit(self._head_step)
+
+    # ------------------------------------------------------------ attn
+    def _attn_step(self, w, x, kstack, vstack, layer, pos):
+        """x: (B,T,d); kstack/vstack: (L,B,KV,S,hd); layer, pos: traced i32.
+
+        Returns (x + attn(x), kstack', vstack') with this layer's cache
+        updated in place in the stack.
+        """
+        self.trace_counts["attn"] += 1
+        cfg = self.cfg
+        B, T, _ = x.shape
+        positions = (pos + jnp.arange(T)[None, :]) * jnp.ones((B, 1), jnp.int32)
+        h = rmsnorm(x, w["ln1"], cfg.norm_eps)
+        ck = jax.lax.dynamic_index_in_dim(kstack, layer, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(vstack, layer, 0, keepdims=False)
+        out, cache = attn_mod.attention_block(
+            w["attn"], cfg, h, positions, self.policy,
+            cache={"k": ck, "v": cv}, cache_pos=pos)
+        kstack = jax.lax.dynamic_update_index_in_dim(kstack, cache["k"],
+                                                     layer, 0)
+        vstack = jax.lax.dynamic_update_index_in_dim(vstack, cache["v"],
+                                                     layer, 0)
+        return x + out, kstack, vstack
+
+    # ------------------------------------------------------------ ffn/moe
+    def _ffn_step(self, w, x, streamed=False):
+        self.trace_counts["ffn"] += 1
+        cfg = self.cfg
+        h = rmsnorm(x, w["ln2"], cfg.norm_eps)
+        if streamed and self._streamed_mm_ok(h.shape, w["ffn"]):
+            h = self._ffn_streamed(w["ffn"], h)
+        else:
+            h = mlp_mod.ffn(w["ffn"], cfg, h, self.policy)
+        return x + h
+
+    def _moe_step(self, w, x):
+        self.trace_counts["moe"] += 1
+        cfg = self.cfg
+        h = rmsnorm(x, w["ln2"], cfg.norm_eps)
+        h = mlp_mod.moe_ffn(w["moe"], cfg, h, self.policy)
+        return x + h
+
+    def _streamed_mm_ok(self, xshape, p) -> bool:
+        if not self.use_streamed_mm:
+            return False
+        B, T, d = xshape
+        f = p["w_up"].shape[1]
+        m = B * T
+        return all(_blocks_divide(dim, blk)
+                   for dim, blk in ((m, 128), (d, 512), (f, 128), (f, 512),
+                                    (d, 128)))
+
+    def _ffn_streamed(self, p, h):
+        """Dense FFN with all matmuls through the Pallas streamed kernel."""
+        B, T, d = h.shape
+        x2 = h.reshape(B * T, d)
+        mm = functools.partial(streamed_matmul, interpret=self._mm_interpret)
+        if self.cfg.mlp == "swiglu":
+            hh = jax.nn.silu(mm(x2, p["w_gate"])) * mm(x2, p["w_up"])
+        else:
+            hh = jax.nn.gelu(mm(x2, p["w_up"]))
+        hh = self.policy.constrain(hh.reshape(B, T, -1), "ffn_hidden")
+        out = mm(hh.reshape(B * T, -1), p["w_down"])
+        return out.reshape(B, T, d)
+
+    # ------------------------------------------------------------ ends
+    def _embed_step(self, embed, tokens):
+        self.trace_counts["embed"] += 1
+        return jnp.take(embed, tokens, axis=0)
+
+    def _head_step(self, final_norm, unembed, x):
+        """unembed: (d, V) — callers pass embed.T for tied embeddings."""
+        self.trace_counts["head"] += 1
+        x = rmsnorm(x, final_norm, self.cfg.norm_eps)
+        return x @ unembed

@@ -30,6 +30,8 @@ TIERS = (1, 4, 16, 32, 64, 512, 1024, 2048, 4096, 8192, 16384)
 class TierEntry:
     plan: Plan
     est_time: float
+    scratch_bytes: int = 0   # VRAM scratch granted at this tier
+    act_bytes: int = 0       # activation reservation inside that scratch
 
 
 @dataclass
@@ -42,10 +44,15 @@ class Schedule:
     match_stats: dict = field(default_factory=dict)
 
     def pick_tier(self, batch_tokens: int) -> int:
-        """Paper: argmin over ceil(tokens/tier) * time[tier]."""
+        """Paper: argmin over ceil(tokens/tier) * time[tier].
+
+        Iterates tiers in ascending order with a strict improvement test, so
+        cost ties break deterministically toward the *smaller* tier (less
+        scratch, less padding) regardless of dict insertion order.
+        """
         best, best_cost = None, float("inf")
-        for t, e in self.tiers.items():
-            cost = math.ceil(batch_tokens / t) * e.est_time
+        for t in sorted(self.tiers):
+            cost = math.ceil(batch_tokens / t) * self.tiers[t].est_time
             if cost < best_cost:
                 best, best_cost = t, cost
         return best
@@ -58,14 +65,49 @@ class Schedule:
         return self.tiers[self.pick_tier(batch_tokens)].plan
 
 
+# Live activation buffers during one sub-layer step: residual x, normed
+# input, sub-layer output, and one temporary (e.g. the FFN hidden reuses the
+# temporary slot tile-by-tile under the streamed-matmul pipeline).
+ACT_BUFFERS = 4
+
+
+def activation_bytes(subs: List[SubLayer], setting: InferenceSetting,
+                     tier: int) -> int:
+    """Activation working set inside the scratch at this tier:
+    ``ACT_BUFFERS * tokens * d * act_bytes`` with tokens = max(tier, batch)
+    (a tier-sized prefill chunk, or one token per sequence at decode)."""
+    d = max((s.meta.get("d", 0) for s in subs), default=0)
+    tokens = max(tier, setting.batch)
+    return ACT_BUFFERS * tokens * d * setting.act_dtype_bytes
+
+
 def decide_scratch_budget(budget: int, subs: List[SubLayer],
                           setting: InferenceSetting, tier: int) -> int:
-    """VRAM scratch: double-buffer for the largest streamable weight +
-    activation working set for this tier."""
+    """VRAM scratch sizing for the copy-compute pipeline:
+
+        scratch = 2 * max_w + ACT_BUFFERS * tokens * d * act_bytes
+
+    where ``2 * max_w`` is the double-buffer holding the largest streamable
+    sub-layer's weights (slot i computes while slot i+1 copies),
+    ``tokens = max(tier, batch)`` is the activation row count actually in
+    flight (a tier-sized prefill chunk, or one token per sequence at
+    decode — whichever is larger), ``d`` the widest model dim, and
+    ``act_bytes`` the activation dtype width from the inference setting.
+    The full double-buffer is granted whenever it fits the budget (pinning
+    gets the remainder — the overlap mechanism outranks extra pins); only
+    when it cannot fit does the single-buffer fallback keep at least half
+    the budget pinnable.
+    """
     max_w = max((s.weight_bytes for s in subs), default=0)
-    d = max((s.meta.get("d", 0) for s in subs), default=0)
-    act = 4 * tier * d * 2  # a few activation buffers at this tier
-    return min(budget // 2, 2 * max_w + act)
+    act = activation_bytes(subs, setting, tier)
+    want = 2 * max_w + act
+    if want <= budget:
+        # grant the full double-buffer; pinning gets the remainder (at real
+        # model scales `want` is far below half the budget anyway)
+        return want
+    # double-buffer cannot fit: degrade to a single staging buffer and keep
+    # at least half the budget pinnable
+    return min(budget // 2, max_w + act)
 
 
 def pin_by_priority(pinned_budget: int, subs: List[SubLayer],
@@ -151,18 +193,20 @@ def plan_tier(budget: int, subs: List[SubLayer], est: TimingEstimator,
     for p in plans:
         p.est_time = est.plan_time(p, tier, setting)
     best = min(plans, key=lambda p: p.est_time)
-    return TierEntry(best, best.est_time)
+    return TierEntry(best, best.est_time, scratch_bytes=scratch,
+                     act_bytes=activation_bytes(subs, setting, tier))
 
 
 def build_schedule(budget_bytes: int, subs: List[SubLayer],
                    est: TimingEstimator, setting: InferenceSetting,
                    tiers=TIERS) -> Schedule:
     entries = {}
-    pinned_bytes = scratch = 0
     for t in tiers:
         e = plan_tier(budget_bytes, subs, est, setting, t)
         entries[t] = e
-    scratch = decide_scratch_budget(budget_bytes, subs, setting, tiers[0])
+    # headline numbers reported at the smallest tier; per-tier scratch lives
+    # on each TierEntry
+    scratch = entries[tiers[0]].scratch_bytes
     pinned, used = pin_by_priority(budget_bytes - scratch, subs, setting)
     return Schedule(tiers=entries, pinned_bytes=used, scratch_bytes=scratch,
                     budget_bytes=budget_bytes,

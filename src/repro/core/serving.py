@@ -91,15 +91,16 @@ class ContinuousBatcher:
         self.last_tokens = self.last_tokens.at[slot, 0].set(nxt)
 
     def _run_slot(self, slot: int, tokens, pos):
-        """Runs a single-sequence chunk against the shared KV slot."""
+        """Runs a single-sequence chunk against the shared KV slot. The
+        executor's caches are stacked (L, B, KV, S, hd) arrays, so slot
+        extraction/write-back is a single slice on the batch axis."""
         kv_slot = {
-            "k": [k[slot:slot + 1] for k in self.kv["k"]],
-            "v": [v[slot:slot + 1] for v in self.kv["v"]],
+            "k": self.kv["k"][:, slot:slot + 1],
+            "v": self.kv["v"][:, slot:slot + 1],
         }
         logits, kv_slot = self.ex._run_chunk(tokens, kv_slot, pos)
-        for i in range(self.cfg.n_layers):
-            self.kv["k"][i] = self.kv["k"][i].at[slot:slot + 1].set(kv_slot["k"][i])
-            self.kv["v"][i] = self.kv["v"][i].at[slot:slot + 1].set(kv_slot["v"][i])
+        self.kv["k"] = self.kv["k"].at[:, slot:slot + 1].set(kv_slot["k"])
+        self.kv["v"] = self.kv["v"].at[:, slot:slot + 1].set(kv_slot["v"])
         self.tier_log.append(self.schedule.pick_tier(tokens.shape[0]
                                                      * tokens.shape[1]))
         return logits

@@ -67,3 +67,4 @@ class InferenceSetting:
     max_new_tokens: int = 256
     kv_dtype_bytes: int = 2
     weight_dtype_bytes: int = 2
+    act_dtype_bytes: int = 2     # activation dtype width (bf16 default)

@@ -1,0 +1,9 @@
+"""Version compatibility for Pallas TPU APIs.
+
+jax renamed ``TPUCompilerParams`` -> ``CompilerParams`` across releases;
+export whichever this version provides.
+"""
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -156,6 +156,30 @@ def attend(q, k, v, causal=True):
 
 
 # ---------------------------------------------------------------- decode
+def attend_cached(q, cache_k, cache_v, pos):
+    """Chunk attention against a KV cache (chunked prefill path).
+
+    q: (B, T, H, hd) holding absolute positions pos..pos+T-1; cache_k/v:
+    (B, KV, S, hd) already updated through pos+T-1. Unlike ``attend`` this
+    sees the *whole* cached prefix, so chunk i attends to chunks 0..i; the
+    mask keeps causality inside the chunk and hides unwritten cache slots.
+    Shapes are independent of ``pos``, so one compiled executable serves
+    every chunk of a prefill (``pos`` stays a traced scalar).
+    """
+    B, T, H, hd = q.shape
+    KV, S = cache_k.shape[1], cache_k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, T, KV, G, hd)
+    scale = hd ** -0.5
+    s = jnp.einsum("btkgd,bksd->bkgts", qg, cache_k).astype(jnp.float32) * scale
+    qpos = pos + jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    s = jnp.where(kpos <= qpos, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bksd->btkgd", p.astype(cache_v.dtype), cache_v)
+    return o.reshape(B, T, H, hd)
+
+
 def attend_decode(q, cache_k, cache_v, pos):
     """One-token attention against a cache.
 
@@ -201,8 +225,8 @@ def attention_block(params, cfg, x, positions, policy, cache=None, cache_pos=Non
         cache = {"k": ck, "v": cv}
         if T == 1:
             o = attend_decode(q, ck, cv, cache_pos)
-        else:  # prefill into cache
-            o = attend(q, k, v, causal=True)
+        else:  # (chunked) prefill into cache: attend to the cached prefix
+            o = attend_cached(q, ck, cv, cache_pos)
     o = policy.constrain(o, "heads")
     out = o.reshape(B, T, cfg.n_heads * cfg.resolved_head_dim) @ params["wo"]
     return out, cache

@@ -6,7 +6,10 @@ from repro.configs import get_config
 from repro.core import (CLI2, CLI3, InferenceSetting, TimingEstimator,
                         build_graph, build_schedule, estimate_tps,
                         estimate_ttft, run_install)
-from repro.core.planner import TIERS, pin_by_priority, plan_tier
+from repro.core.costmodel import Plan
+from repro.core.planner import (TIERS, Schedule, TierEntry,
+                                decide_scratch_budget, pin_by_priority,
+                                plan_tier)
 
 
 @pytest.fixture(scope="module")
@@ -107,6 +110,38 @@ def test_everything_pins_at_huge_budget(db, subs):
     plan = sched.tiers[1].plan
     assert all(p.engine == "gpu" and not p.streamed
                for p in plan.placements if p.sub.kind != "kv")
+
+
+def test_pick_tier_tie_breaks_toward_smaller_tier():
+    """Cost ties must resolve to the smaller tier deterministically, not by
+    dict insertion order (regression: a {64:..., 16:...} table used to pick
+    64 for any token count that tied)."""
+    def entry():
+        return TierEntry(Plan("static", []), 1.0)
+    sched = Schedule(tiers={64: entry(), 16: entry()}, pinned_bytes=0,
+                     scratch_bytes=0, budget_bytes=0)
+    # ceil(10/16) == ceil(10/64) == 1 iteration at equal est_time: a tie
+    assert sched.pick_tier(10) == 16
+    assert sched.pick_tier(16) == 16
+    # non-tie still picks by cost: 17 tokens need 2 iterations at tier 16
+    assert sched.pick_tier(17) == 64
+
+
+def test_scratch_budget_counts_dtype_batch_and_double_buffer(subs):
+    budget = int(64e9)
+    base = InferenceSetting(batch=1, context=4096)
+    wide = InferenceSetting(batch=1, context=4096, act_dtype_bytes=4)
+    batched = InferenceSetting(batch=512, context=4096)
+    tier = 1024
+    s_base = decide_scratch_budget(budget, subs, base, tier)
+    # fp32 activations need a bigger working set than bf16
+    assert decide_scratch_budget(budget, subs, wide, tier) > s_base
+    # tokens in flight = max(tier, batch): batch beyond the tier grows it
+    assert decide_scratch_budget(budget, subs, batched, 1) \
+        > decide_scratch_budget(budget, subs, base, 1)
+    # an ample budget always grants the streaming double-buffer
+    max_w = max(s.weight_bytes for s in subs)
+    assert s_base >= 2 * max_w
 
 
 def test_moe_graph_has_expert_sublayers():

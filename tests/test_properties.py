@@ -4,7 +4,11 @@ import math
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+# optional dependency: absence must not break collection of the tier-1 suite
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_config
 from repro.core.planner import TIERS, Schedule, TierEntry, pin_by_priority
