@@ -63,6 +63,8 @@ class SubLayerEngine:
         # is in-place; CPU ignores donation (and would warn), so skip there
         donate = (2, 3) if jax.default_backend() != "cpu" else ()
         self.attn_step = jax.jit(self._attn_step, donate_argnums=donate)
+        self.attn_decode_step = jax.jit(self._attn_decode_step,
+                                        donate_argnums=donate)
         self.ffn_step = jax.jit(self._ffn_step, static_argnames=("streamed",))
         self.moe_step = jax.jit(self._moe_step)
         self.embed_step = jax.jit(self._embed_step)
@@ -89,6 +91,38 @@ class SubLayerEngine:
                                                      layer, 0)
         vstack = jax.lax.dynamic_update_index_in_dim(vstack, cache["v"],
                                                      layer, 0)
+        return x + out, kstack, vstack
+
+    def _attn_decode_step(self, w, x, kstack, vstack, layer, pos_vec, active):
+        """Fused multi-slot decode attention (DESIGN.md §7).
+
+        x: (B, 1, d) — one new token per slot; pos_vec: (B,) i32 per-slot
+        cache position; active: (B,) bool. Every slot attends at its own
+        position via the vectorised mask in ``attend_decode``; cache writes
+        go through a per-slot ``dynamic_update_slice`` and are masked so
+        inactive slots' caches stay untouched. One call serves the whole
+        batch, so a streamed sub-layer's weights are fetched once per
+        iteration regardless of how many slots are in flight.
+        """
+        self.trace_counts["attn_decode"] += 1
+        cfg = self.cfg
+        B = x.shape[0]
+        h = rmsnorm(x, w["ln1"], cfg.norm_eps)
+        ck = jax.lax.dynamic_index_in_dim(kstack, layer, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(vstack, layer, 0, keepdims=False)
+        q, k, v = attn_mod.qkv_project(w["attn"], cfg, h, pos_vec[:, None])
+        q = self.policy.constrain(q, "heads")
+        ck_new, cv_new = attn_mod.cache_update_batched(ck, cv, k, v, pos_vec)
+        ck_new = self.policy.constrain(ck_new, "kv_cache")
+        cv_new = self.policy.constrain(cv_new, "kv_cache")
+        keep = active[:, None, None, None]
+        ck = jnp.where(keep, ck_new, ck)
+        cv = jnp.where(keep, cv_new, cv)
+        o = attn_mod.attend_decode(q, ck, cv, pos_vec)
+        o = self.policy.constrain(o, "heads")
+        out = o.reshape(B, 1, -1) @ w["attn"]["wo"]
+        kstack = jax.lax.dynamic_update_index_in_dim(kstack, ck, layer, 0)
+        vstack = jax.lax.dynamic_update_index_in_dim(vstack, cv, layer, 0)
         return x + out, kstack, vstack
 
     # ------------------------------------------------------------ ffn/moe

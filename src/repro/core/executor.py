@@ -49,6 +49,10 @@ class ExecStats:
     boundary_hops: int = 0
     engine_calls: dict = field(default_factory=lambda: {"gpu": 0, "cpu": 0})
     tiers_used: list = field(default_factory=list)
+    # per _run_decode pass: one pass == one serving iteration in fused mode,
+    # one pass per active slot in the per-slot baseline
+    decode_passes: int = 0
+    pass_streamed_bytes: list = field(default_factory=list)
 
 
 class PipelinedExecutor:
@@ -174,14 +178,11 @@ class PipelinedExecutor:
             h = mlp_mod.ffn(w["ffn"], cfg, h, self.policy)
         return x + h
 
-    # ------------------------------------------------------------ forward
-    def _run_chunk(self, tokens, kv, pos):
-        """One pass over all sub-layers for a token chunk.
-
-        kv: dict with stacked "k"/"v" arrays of shape (L, B, KV, S, hd).
-        """
-        cfg = self.cfg
-        tier = self.schedule.pick_tier(tokens.shape[0] * tokens.shape[1])
+    # ------------------------------------------------------------ passes
+    def _begin_pass(self, tier: int):
+        """Start one pass at ``tier``: begin the prefetch session over the
+        tier plan's streamed placements and return ``(by_name, streaming)``
+        for ``_weights_for`` lookups."""
         entry = self.schedule.tiers[tier]
         plan = entry.plan
         self.stats.tiers_used.append(tier)
@@ -198,6 +199,52 @@ class PipelinedExecutor:
             self.prefetch.start(
                 order, avail_bytes=max(entry.scratch_bytes - entry.act_bytes,
                                        0))
+        return by_name, streaming, bool(order)
+
+    def _end_pass(self, started: bool):
+        if started:
+            self.prefetch.finish()
+        self._sync_stats()
+
+    def _layer_loop(self, x, k, v, by_name, streaming, attn_fn):
+        """Walk every layer's (attn, ffn/moe) sub-layers under the current
+        pass's plan: fetch weights (pinned / prefetched / at-use), account
+        engine calls and boundary hops, run the sub-layer, release scratch
+        slots. ``attn_fn(w, x, k, v, i)`` supplies the attention step —
+        chunked (`_attn_sub`) or fused decode (`attn_decode_step`)."""
+        cfg = self.cfg
+        prev_engine = None
+        for i in range(cfg.n_layers):
+            pa = by_name[f"L{i}/attn"]
+            w, rel = self._weights_for(pa, streaming)
+            self.stats.engine_calls[pa.engine] += 1
+            if prev_engine is not None and prev_engine != pa.engine:
+                self.stats.boundary_hops += 1
+            prev_engine = pa.engine
+            x, k, v = attn_fn(w, x, k, v, i)
+            if rel:
+                self.prefetch.release(pa.sub.name)
+            pkey = f"L{i}/moe" if cfg.moe is not None else f"L{i}/ffn"
+            pf = by_name[pkey]
+            w, rel = self._weights_for(pf, streaming)
+            self.stats.engine_calls[pf.engine] += 1
+            if prev_engine != pf.engine:
+                self.stats.boundary_hops += 1
+            prev_engine = pf.engine
+            x = self._ffn_sub(w, x, streamed=pf.streamed)
+            if rel:
+                self.prefetch.release(pf.sub.name)
+        return x, k, v
+
+    # ------------------------------------------------------------ forward
+    def _run_chunk(self, tokens, kv, pos):
+        """One pass over all sub-layers for a token chunk.
+
+        kv: dict with stacked "k"/"v" arrays of shape (L, B, KV, S, hd).
+        """
+        cfg = self.cfg
+        by_name, streaming, started = self._begin_pass(
+            self.schedule.pick_tier(tokens.shape[0] * tokens.shape[1]))
         try:
             if self.engine is not None:
                 x = self.engine.embed_step(self._embed_dev, tokens)
@@ -208,27 +255,10 @@ class PipelinedExecutor:
                 k = [kv["k"][i] for i in range(cfg.n_layers)]
                 v = [kv["v"][i] for i in range(cfg.n_layers)]
             pos_arr = jnp.asarray(pos, jnp.int32)
-            prev_engine = None
-            for i in range(cfg.n_layers):
-                pa = by_name[f"L{i}/attn"]
-                w, rel = self._weights_for(pa, streaming)
-                self.stats.engine_calls[pa.engine] += 1
-                if prev_engine is not None and prev_engine != pa.engine:
-                    self.stats.boundary_hops += 1
-                prev_engine = pa.engine
-                x, k, v = self._attn_sub(w, x, k, v, i, pos_arr, pos)
-                if rel:
-                    self.prefetch.release(pa.sub.name)
-                pkey = f"L{i}/moe" if cfg.moe is not None else f"L{i}/ffn"
-                pf = by_name[pkey]
-                w, rel = self._weights_for(pf, streaming)
-                self.stats.engine_calls[pf.engine] += 1
-                if prev_engine != pf.engine:
-                    self.stats.boundary_hops += 1
-                prev_engine = pf.engine
-                x = self._ffn_sub(w, x, streamed=pf.streamed)
-                if rel:
-                    self.prefetch.release(pf.sub.name)
+            x, k, v = self._layer_loop(
+                x, k, v, by_name, streaming,
+                lambda w, x, k, v, i: self._attn_sub(w, x, k, v, i, pos_arr,
+                                                     pos))
             if self.engine is not None:
                 logits = self.engine.head_step(self._final_dev,
                                                self._unembed_dev, x)
@@ -236,11 +266,40 @@ class PipelinedExecutor:
                 x = rmsnorm(x, self._final_dev, cfg.norm_eps)
                 logits = x @ self._unembed_dev
         finally:
-            if order:
-                self.prefetch.finish()
-        self._sync_stats()
+            self._end_pass(started)
         if self.engine is None:
             k, v = jnp.stack(k), jnp.stack(v)
+        return logits, {"k": k, "v": v}
+
+    def _run_decode(self, tokens, kv, pos_vec, active, n_active: int):
+        """One fused multi-slot decode iteration (DESIGN.md §7).
+
+        tokens: (B, 1) last token per slot; pos_vec: (B,) per-slot cache
+        positions; active: (B,) bool slot mask; n_active: batch-wide new
+        token count (drives the tier pick, paper PickTier). All slots run
+        through one batched pass, so every streamed sub-layer crosses the
+        link exactly once per iteration — the per-slot baseline pays the
+        copy cost once per active slot instead.
+        """
+        assert self.engine is not None, "fused decode requires the jitted " \
+            "engine (jit_engine=True)"
+        by_name, streaming, started = self._begin_pass(
+            self.schedule.pick_decode_tier(n_active))
+        streamed_before = self.stats.streamed_bytes
+        try:
+            x = self.engine.embed_step(self._embed_dev, tokens)
+            k, v = kv["k"], kv["v"]
+            x, k, v = self._layer_loop(
+                x, k, v, by_name, streaming,
+                lambda w, x, k, v, i: self.engine.attn_decode_step(
+                    w, x, k, v, self._layer_ids[i], pos_vec, active))
+            logits = self.engine.head_step(self._final_dev,
+                                           self._unembed_dev, x)
+        finally:
+            self._end_pass(started)
+        self.stats.decode_passes += 1
+        self.stats.pass_streamed_bytes.append(
+            self.stats.streamed_bytes - streamed_before)
         return logits, {"k": k, "v": v}
 
     def init_kv(self, batch):

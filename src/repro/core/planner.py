@@ -57,6 +57,13 @@ class Schedule:
                 best, best_cost = t, cost
         return best
 
+    def pick_decode_tier(self, active_slots: int) -> int:
+        """Tier for one fused decode iteration: the batch-wide new-token
+        count is one token per active slot (paper: PickTier runs over the
+        whole batch, never per request), so the iteration's plan is the one
+        picked for ``active_slots`` tokens. See DESIGN.md §7."""
+        return self.pick_tier(max(1, active_slots))
+
     def time_for_tokens(self, batch_tokens: int) -> float:
         t = self.pick_tier(batch_tokens)
         return math.ceil(batch_tokens / t) * self.tiers[t].est_time

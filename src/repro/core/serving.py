@@ -6,7 +6,16 @@ per decode-phase request. The batch-wide new-token count picks the tier
 (``PickTier``), whose schedule is set up and executed for everyone at once.
 
 ``ContinuousBatcher`` implements that loop over the two-tier executor:
-admit -> chunked prefill at the tier size -> interleaved decode -> retire.
+admit -> chunked prefill at the tier size -> fused batched decode -> retire.
+
+Decode is *fused* by default (DESIGN.md §7): one jitted multi-slot step per
+iteration takes the stacked ``(L, B, KV, S, hd)`` caches, a per-slot
+position vector and the batch of last tokens, and advances every active
+slot at once — so each streamed sub-layer crosses the link exactly once per
+iteration regardless of how many slots are in flight. ``fused=False`` keeps
+the per-slot loop (one B=1 pass per active slot, which re-streams weights
+per slot) as the baseline the bit-identity tests and ``bench_serving``
+compare against.
 """
 from __future__ import annotations
 
@@ -16,7 +25,6 @@ from typing import List, Optional
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
 from repro.core.executor import PipelinedExecutor
@@ -53,17 +61,28 @@ class ContinuousBatcher:
     """
 
     def __init__(self, cfg, params, schedule: Schedule, max_batch: int = 4,
-                 max_seq: int = 256):
+                 max_seq: int = 256, fused: bool = True, overlap: bool = True,
+                 jit_engine: bool = True):
         self.cfg = cfg
         self.schedule = schedule
         self.max_batch = max_batch
         self.max_seq = max_seq
-        self.ex = PipelinedExecutor(cfg, params, schedule, max_seq=max_seq)
+        self.ex = PipelinedExecutor(cfg, params, schedule, max_seq=max_seq,
+                                    overlap=overlap, jit_engine=jit_engine)
+        # the fused step runs through the jitted engine's batched decode
+        self.fused = fused and jit_engine
         self.kv = self.ex.init_kv(max_batch)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.iterations = 0
         self.tier_log = []
+        self.completed: List[Request] = []
+        # per decode iteration: plan-accounted streamed weight bytes, and
+        # actual host->device bytes moved (covers CPU-engine at-use fetches
+        # too, which is what the per-slot baseline mostly pays at tier 1)
+        self.iter_streamed_bytes: List[int] = []
+        self.iter_moved_bytes: List[int] = []
+        self._serve_wall_s = 0.0
 
     # ------------------------------------------------------------ admit
     def _admit(self, queue: List[Request]):
@@ -76,6 +95,14 @@ class ContinuousBatcher:
     def _prefill_slot(self, slot: int, req: Request):
         """Chunked prefill of one request at the planner-picked tier."""
         T = len(req.prompt)
+        if T == 0:
+            raise ValueError(f"request {req.rid} has an empty prompt")
+        if T + req.max_new_tokens > self.max_seq:
+            # past max_seq the cache write offset clamps and the validity
+            # mask saturates — silently wrong tokens, so reject up front
+            raise ValueError(
+                f"request {req.rid}: prompt ({T}) + max_new_tokens "
+                f"({req.max_new_tokens}) exceeds max_seq ({self.max_seq})")
         tier = self.schedule.pick_tier(T)
         chunk = max(1, min(T, tier))
         pos = 0
@@ -89,6 +116,11 @@ class ContinuousBatcher:
         req.first_token_at = time.perf_counter()
         req.pos = T
         self.last_tokens = self.last_tokens.at[slot, 0].set(nxt)
+        # a request whose budget is a single token finishes on its prefill
+        # token: retire it here so its slot frees immediately and done_at is
+        # recorded exactly like a decode-phase completion
+        if req.done:
+            self._retire(slot)
 
     def _run_slot(self, slot: int, tokens, pos):
         """Runs a single-sequence chunk against the shared KV slot. The
@@ -105,46 +137,117 @@ class ContinuousBatcher:
                                                      * tokens.shape[1]))
         return logits
 
+    # ------------------------------------------------------------ retire
+    def _retire(self, slot: int):
+        req = self.slots[slot]
+        req.done_at = time.perf_counter()
+        self.completed.append(req)
+        self.slots[slot] = None
+
     # ------------------------------------------------------------ decode
     def _decode_iteration(self):
         """One batched decode step for every active slot (batch-wide new
         token count = #active -> tier table drives the schedule)."""
-        active = [i for i, r in enumerate(self.slots)
-                  if r is not None and not r.done]
+        active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return
-        # batch-wide execution: all active slots share the iteration; slots
-        # can be at different positions, so each runs against its own cache
-        # position (the executor handles per-slot positions sequentially at
-        # smoke scale; a pod implementation fuses them — same schedule)
-        self.tier_log.append(self.schedule.pick_tier(len(active)))
+        before = self.ex.stats.streamed_bytes
+        moved_before = self.ex.stats.staged_bytes
+        if self.fused:
+            self._decode_fused(active)
+        else:
+            self._decode_per_slot(active)
+        self.iter_streamed_bytes.append(self.ex.stats.streamed_bytes - before)
+        self.iter_moved_bytes.append(self.ex.stats.staged_bytes
+                                     - moved_before)
+
+    def _decode_fused(self, active: List[int]):
+        """Fused multi-slot step: every active slot advances one token in a
+        single batched pass; streamed sub-layers are fetched once for the
+        whole iteration (DESIGN.md §7)."""
+        pos_vec = np.zeros((self.max_batch,), np.int32)
+        mask = np.zeros((self.max_batch,), bool)
         for i in active:
-            req = self.slots[i]
-            logits = self._run_slot(i, self.last_tokens[i:i + 1], req.pos)
-            nxt = int(jnp.argmax(logits[0, -1]))
-            req.generated.append(nxt)
-            req.pos += 1
-            self.last_tokens = self.last_tokens.at[i, 0].set(nxt)
-            if req.done:
-                req.done_at = time.perf_counter()
-                self.slots[i] = None
+            pos_vec[i] = self.slots[i].pos
+            mask[i] = True
+        self.tier_log.append(self.schedule.pick_decode_tier(len(active)))
+        logits, self.kv = self.ex._run_decode(
+            self.last_tokens, self.kv, jnp.asarray(pos_vec),
+            jnp.asarray(mask), n_active=len(active))
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for i in active:
+            self._advance(i, int(nxt[i]))
+
+    def _decode_per_slot(self, active: List[int]):
+        """Baseline: slots decode one at a time, paying the streamed-weight
+        copy once per active slot per iteration, each pass at the tier
+        picked for its single new token. With the jitted engine each slot
+        runs a one-hot-masked pass at the full batch shape — the same
+        executables as the fused step, so on backends where both paths use
+        the same FFN kernel (any CPU run, incl. CI) the comparison is
+        bitwise; on TPU the fused iteration's tier may mark FFNs streamed
+        and route them through the Pallas ``streamed_matmul`` kernel, which
+        is allclose- but not bit-equal. The eager engine falls back to the
+        seed's B=1 slice loop."""
+        if self.ex.engine is None:
+            for i in active:
+                logits = self._run_slot(i, self.last_tokens[i:i + 1],
+                                        self.slots[i].pos)
+                self._advance(i, int(jnp.argmax(logits[0, -1])))
+            return
+        pos_vec = np.zeros((self.max_batch,), np.int32)
+        for i in active:
+            pos_vec[i] = self.slots[i].pos
+        pos_vec = jnp.asarray(pos_vec)
+        for i in active:
+            mask = np.zeros((self.max_batch,), bool)
+            mask[i] = True
+            self.tier_log.append(self.schedule.pick_decode_tier(1))
+            logits, self.kv = self.ex._run_decode(
+                self.last_tokens, self.kv, pos_vec, jnp.asarray(mask),
+                n_active=1)
+            self._advance(i, int(jnp.argmax(logits[i, -1])))
+
+    def _advance(self, slot: int, token: int):
+        req = self.slots[slot]
+        req.generated.append(token)
+        req.pos += 1
+        self.last_tokens = self.last_tokens.at[slot, 0].set(token)
+        if req.done:
+            self._retire(slot)
 
     # ------------------------------------------------------------ loop
     def serve(self, requests: List[Request], max_iterations: int = 10_000):
         queue = list(requests)
-        done: List[Request] = []
-        while (queue or any(self.slots)) and self.iterations < max_iterations:
+        t0 = time.perf_counter()
+        while (queue or any(s is not None for s in self.slots)) \
+                and self.iterations < max_iterations:
             self._admit(queue)
             self._decode_iteration()
             self.iterations += 1
-            done.extend(r for r in requests
-                        if r.done and r.done_at and r not in done)
+        self._serve_wall_s += time.perf_counter() - t0
         return requests
 
     def stats(self):
+        done = self.completed
+        iters = self.iter_streamed_bytes
+        total_generated = sum(len(r.generated) for r in done) \
+            + sum(len(r.generated) for r in self.slots if r is not None)
         return {
             "iterations": self.iterations,
             "tiers_used": sorted(set(self.tier_log)),
             "streamed_bytes": self.ex.stats.streamed_bytes,
             "engine_calls": dict(self.ex.stats.engine_calls),
+            # completion stats (satellite: serve() used to build-and-drop a
+            # quadratic `done` list; the retire path now records these)
+            "completed": len(done),
+            "generated_tokens": total_generated,
+            "wall_s": self._serve_wall_s,
+            "aggregate_tps": total_generated / max(self._serve_wall_s, 1e-12),
+            "mean_ttft_s": (float(np.mean([r.ttft for r in done]))
+                            if done else 0.0),
+            "mean_iter_streamed_bytes": (float(np.mean(iters))
+                                         if iters else 0.0),
+            "mean_iter_moved_bytes": (float(np.mean(self.iter_moved_bytes))
+                                      if self.iter_moved_bytes else 0.0),
         }

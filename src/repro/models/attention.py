@@ -184,7 +184,9 @@ def attend_decode(q, cache_k, cache_v, pos):
     """One-token attention against a cache.
 
     q: (B, 1, H, hd); cache_k/v: (B, KV, S, hd); pos: scalar int (tokens valid
-    in cache INCLUDING the one just written at index pos).
+    in cache INCLUDING the one just written at index pos), or a per-sequence
+    (B,) vector when sequences sit at different positions (fused multi-slot
+    decode — see DESIGN.md §7).
     """
     B, _, H, hd = q.shape
     KV, S = cache_k.shape[1], cache_k.shape[2]
@@ -192,6 +194,9 @@ def attend_decode(q, cache_k, cache_v, pos):
     qg = q.reshape(B, KV, G, hd)
     scale = hd ** -0.5
     s = jnp.einsum("bkgd,bksd->bkgs", qg, cache_k).astype(jnp.float32) * scale
+    pos = jnp.asarray(pos)
+    if pos.ndim == 1:  # per-sequence positions: (B,) -> (B, 1, 1, 1)
+        pos = pos[:, None, None, None]
     valid = jnp.arange(S)[None, None, None, :] <= pos
     s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
@@ -205,6 +210,24 @@ def cache_update(cache_k, cache_v, k, v, pos):
     v = jnp.moveaxis(v, 1, 2)
     ck = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, 0, pos, 0))
     cv = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, 0, pos, 0))
+    return ck, cv
+
+
+def cache_update_batched(cache_k, cache_v, k, v, pos):
+    """Per-sequence cache write: k, v (B, T, KV, hd) go into caches
+    (B, KV, S, hd) at sequence b's own position ``pos[b]`` (pos: (B,) int).
+    A vmapped ``dynamic_update_slice`` so each batch row lands at its own
+    offset — the fused multi-slot decode path where slots are mid-stream at
+    different depths (DESIGN.md §7)."""
+    k = jnp.moveaxis(k, 1, 2)  # (B, KV, T, hd)
+    v = jnp.moveaxis(v, 1, 2)
+
+    def _upd(cache, upd, p):
+        return jax.lax.dynamic_update_slice(cache, upd.astype(cache.dtype),
+                                            (0, p, 0))
+
+    ck = jax.vmap(_upd)(cache_k, k, pos)
+    cv = jax.vmap(_upd)(cache_v, v, pos)
     return ck, cv
 
 

@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Docs-consistency check: every ``DESIGN.md §N`` reference in the code
+must point at a section header that actually exists in DESIGN.md.
+
+Scans ``src/`` and ``benchmarks/`` for ``DESIGN.md §N`` (and bare ``§N``
+immediately following a DESIGN.md mention on the same line), collects the
+``## §N — ...`` headers from DESIGN.md, and exits non-zero listing any
+dangling reference. Run from the repo root:
+
+    python tools/check_design_refs.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks")
+REF_RE = re.compile(r"DESIGN\.md\s*(§\d+(?:\s*,\s*§\d+)*)")
+SEC_RE = re.compile(r"^#{1,6}\s*§(\d+)\b", re.MULTILINE)
+
+
+def design_sections(design_path: pathlib.Path) -> set:
+    return {int(m) for m in SEC_RE.findall(design_path.read_text())}
+
+
+def code_references(root: pathlib.Path):
+    """Yields (path, lineno, section_number) per DESIGN.md §N reference."""
+    for d in SCAN_DIRS:
+        for path in sorted((root / d).rglob("*.py")):
+            for lineno, line in enumerate(
+                    path.read_text().splitlines(), start=1):
+                for group in REF_RE.findall(line):
+                    for sec in re.findall(r"§(\d+)", group):
+                        yield path, lineno, int(sec)
+
+
+def main() -> int:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist but the code cites it")
+        return 1
+    sections = design_sections(design)
+    refs = list(code_references(ROOT))
+    dangling = [(p, ln, s) for p, ln, s in refs if s not in sections]
+    print(f"DESIGN.md sections: {sorted(sections)}; "
+          f"{len(refs)} in-code references checked")
+    if dangling:
+        for path, lineno, sec in dangling:
+            print(f"FAIL: {path.relative_to(ROOT)}:{lineno} cites "
+                  f"DESIGN.md §{sec}, which has no matching header")
+        return 1
+    if not refs:
+        print("WARN: no DESIGN.md §N references found — check the regex")
+    print("OK: every DESIGN.md §N reference resolves")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
