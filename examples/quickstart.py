@@ -1,49 +1,38 @@
-"""Quickstart: build a model, run it, and plan a VRAM/HBM budget.
+"""Quickstart: open a `repro.Session`, plan a VRAM/HBM budget, generate.
 
     PYTHONPATH=src python examples/quickstart.py [--arch yi-9b]
 """
 import argparse
+import os
 
-import jax
-import jax.numpy as jnp
+# step [3] compares tokens across schedules: pin per-op bf16 rounding (see
+# tests/conftest.py) so greedy picks can't flip on exact bf16 ties
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_allow_excess_precision" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_allow_excess_precision=false").strip()
 
-from repro.configs import get_config, get_smoke_config, list_archs
-from repro.core import (CLI3, InferenceSetting, TimingEstimator, build_graph,
-                        build_schedule, estimate_tps, estimate_ttft,
-                        run_install)
-from repro.models import build_model
+import numpy as np  # noqa: E402
+
+from repro import Session  # noqa: E402
+from repro.configs import get_config, get_smoke_config, list_archs  # noqa: E402
+from repro.core import CLI3, InferenceSetting, build_graph  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="yi-9b", choices=list_archs(include_paper=True))
+    ap.add_argument("--arch", default="yi-9b",
+                    choices=list_archs(include_paper=True))
     ap.add_argument("--budget-gb", type=float, default=8.0)
     args = ap.parse_args()
 
-    # 1. a real forward pass (reduced config, CPU)
-    cfg = get_smoke_config(args.arch)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    tokens = jax.random.randint(jax.random.PRNGKey(1),
-                                (2, 16, cfg.n_codebooks) if cfg.n_codebooks
-                                else (2, 16), 0, cfg.vocab)
-    batch = {"tokens": tokens}
-    if cfg.family == "vlm":
-        nv = cfg.n_vision_tokens
-        batch["vision_embeds"] = jnp.zeros((2, nv, cfg.d_model), jnp.bfloat16)
-        batch["positions"] = jnp.broadcast_to(
-            jnp.arange(16 + nv), (3, 2, 16 + nv)).astype(jnp.int32)
-    logits, _ = model.apply(params, batch)
-    print(f"[1] {cfg.name}: forward OK, logits {logits.shape}")
-
-    # 2. pipelined sharding: plan the FULL config at a budget
+    # 1. plan the FULL config at a budget (planning-only Session: the
+    #    install-phase profile runs, no weights are allocated)
     full = get_config(args.arch)
-    subs = build_graph(full, wdtype=2)
-    db = run_install(CLI3, quick=True)
-    est = TimingEstimator(db, CLI3)
-    setting = InferenceSetting(batch=1, context=4096)
-    sched = build_schedule(int(args.budget_gb * 1e9), subs, est, setting)
-    print(f"[2] {full.name} ({full.param_count()/1e9:.1f}B) at "
+    plan = Session.open(full, CLI3, int(args.budget_gb * 1e9),
+                        InferenceSetting(batch=1, context=4096))
+    sched = plan.schedule
+    print(f"[1] {full.name} ({full.param_count()/1e9:.1f}B) at "
           f"{args.budget_gb}G budget:")
     print(f"    pinned {sched.pinned_bytes/1e9:.2f}G, "
           f"scratch {sched.scratch_bytes/1e9:.2f}G")
@@ -51,8 +40,34 @@ def main():
         e = sched.tiers[tier]
         print(f"    tier {tier:5d}: plan={e.plan.name:9s} "
               f"est {e.est_time*1e3:8.2f} ms/iter")
-    print(f"    est TTFT(4k prompt) {estimate_ttft(sched, 4096):6.2f}s | "
-          f"est TPS {estimate_tps(sched, 1):6.1f}")
+    est = plan.estimates(4096)
+    print(f"    est TTFT(4k prompt) {est['ttft_s']:6.2f}s | "
+          f"est TPS {est['tps']:6.1f}")
+
+    # 2. a real generation at reduced scale (CPU two-tier simulation):
+    #    same Session API, executor built lazily on first generate()
+    cfg = get_smoke_config(args.arch)
+    if cfg.family not in ("dense", "moe"):
+        print(f"[2] family {cfg.family}: planning-only (executor covers "
+              "dense/moe)")
+        return
+    total = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+    sess = Session.open(cfg, CLI3, int(total * 2.0) + 1,
+                        InferenceSetting(batch=2, context=128),
+                        db=plan.db, max_seq=128)
+    prompts = np.random.RandomState(1).randint(0, cfg.vocab, (2, 16))
+    gen = sess.generate(prompts, max_new_tokens=8)
+    print(f"[2] {cfg.name}: generated {gen.shape} tokens; sample "
+          f"{gen[0].tolist()}")
+
+    # 3. live re-plan: shrink the budget 20x mid-session; only the
+    #    pin/evict delta moves (Schedule.diff == executor rebind, §8)
+    diff = sess.update_budget(int(total * 0.1) + 1)
+    gen2 = sess.generate(prompts, max_new_tokens=8)
+    print(f"[3] rebudget 2.0x -> 0.1x weights: moved "
+          f"{diff.moved_bytes/1e6:.2f}MB ({diff.summary()})")
+    print(f"    tokens identical across budgets: "
+          f"{bool(np.array_equal(gen, gen2))}")
 
 
 if __name__ == "__main__":

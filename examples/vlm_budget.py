@@ -1,8 +1,10 @@
 """VLMOpt demo: high-resolution vision encoding under a VRAM budget.
 
 Shows (a) the runnable flash/Q-chunked vision encoder matching the
-full-attention reference, and (b) the analytic VRAM-demand grid reproducing
-the paper's OOM pattern and ~10x reduction for CR1-class models.
+full-attention reference, (b) the analytic VRAM-demand grid reproducing
+the paper's OOM pattern and ~10x reduction for CR1-class models, and
+(c) the language-side tier plan for the paper's VLM arch under client
+budgets via a planning-only `repro.Session`.
 
     PYTHONPATH=src python examples/vlm_budget.py
 """
@@ -10,6 +12,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import Session
+from repro.configs import get_config
+from repro.core import CLI1, InferenceSetting, run_install
 from repro.core.vlmopt import (RESOLUTIONS, VisionConfig, init_vision_params,
                                n_vision_tokens, vision_encode, vlm_peak_vram)
 
@@ -41,6 +46,20 @@ def main():
     red = 20e9 / vlm_peak_vram(vc, "1440p", int(1.2e9), vlmopt=True)
     print(f"\n1440p peak-VRAM reduction vs the paper's 20G vLLM baseline: "
           f"{red:.1f}x")
+
+    # language side: plan the paper's VLM arch under laptop-class budgets
+    # (planning-only Session — vlm executes through the encoder above;
+    # the tier table covers the decode-phase language stack)
+    full = get_config("qwen2-vl-7b")
+    db = run_install(CLI1, quick=True)  # one install profile for both plans
+    print(f"\n{full.name} language-stack tier plan on {CLI1.name}:")
+    for gb in (4.0, 8.0):
+        sess = Session.open(full, CLI1, int(gb * 1e9),
+                            InferenceSetting(batch=1, context=4096), db=db)
+        est = sess.estimates(4096)
+        print(f"  {gb:4.1f}G: pinned {est['pinned_bytes']/1e9:5.2f}G "
+              f"est TTFT(4k) {est['ttft_s']:6.2f}s "
+              f"est TPS {est['tps']:6.1f}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,7 @@
+"""repro — VRAM-constrained xLM inference via pipelined sharding.
+
+``repro.Session`` is the front door: plan -> install -> serve with live
+re-planning under changing VRAM budgets (DESIGN.md §8). The underlying
+building blocks stay importable from ``repro.core``.
+"""
+from repro.session import Session  # noqa: F401

@@ -5,7 +5,8 @@ from repro.core.executor import ExecStats, PipelinedExecutor  # noqa: F401
 from repro.core.graphing import ShardDiv, build_graph  # noqa: F401
 from repro.core.install import run_install  # noqa: F401
 from repro.core.planner import (  # noqa: F401
-    TIERS, Schedule, build_schedule, estimate_tps, estimate_ttft)
+    PINNED_COMPUTE_KINDS, TIERS, Schedule, ScheduleDiff, build_schedule,
+    estimate_tps, estimate_ttft)
 from repro.core.prefetch import PrefetchEngine, PrefetchStats  # noqa: F401
 from repro.core.profile_db import ProfileDB  # noqa: F401
 from repro.core.system import (  # noqa: F401

@@ -65,7 +65,8 @@ class SubLayerEngine:
         self.attn_step = jax.jit(self._attn_step, donate_argnums=donate)
         self.attn_decode_step = jax.jit(self._attn_decode_step,
                                         donate_argnums=donate)
-        self.ffn_step = jax.jit(self._ffn_step, static_argnames=("streamed",))
+        self._ffn_step_jit = jax.jit(self._ffn_step,
+                                     static_argnames=("streamed",))
         self.moe_step = jax.jit(self._moe_step)
         self.embed_step = jax.jit(self._embed_step)
         self.head_step = jax.jit(self._head_step)
@@ -126,6 +127,17 @@ class SubLayerEngine:
         return x + out, kstack, vstack
 
     # ------------------------------------------------------------ ffn/moe
+    def ffn_step(self, w, x, streamed=False):
+        """``streamed`` is a static argument, so it is normalised HERE —
+        shapes and kernel availability are host-known — before touching the
+        jit cache: where the Pallas path can't run (non-TPU without the
+        opt-in, or non-dividing blocks) a streamed placement compiles to
+        the very same executable as a pinned one. Without this, a live
+        re-plan that newly streams FFNs (``rebind``, DESIGN.md §8) would
+        trace a redundant variant of an identical computation."""
+        streamed = streamed and self._streamed_mm_ok(x.shape, w["ffn"])
+        return self._ffn_step_jit(w, x, streamed=streamed)
+
     def _ffn_step(self, w, x, streamed=False):
         self.trace_counts["ffn"] += 1
         cfg = self.cfg

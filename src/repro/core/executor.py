@@ -35,7 +35,7 @@ from repro.core.planner import Schedule
 from repro.core.prefetch import PrefetchEngine
 from repro.models import attention as attn_mod
 from repro.models import mlp as mlp_mod
-from repro.models.common import NoPolicy, rmsnorm
+from repro.models.common import NoPolicy, greedy_token, rmsnorm
 
 
 @dataclass
@@ -53,6 +53,13 @@ class ExecStats:
     # one pass per active slot in the per-slot baseline
     decode_passes: int = 0
     pass_streamed_bytes: list = field(default_factory=list)
+    # live re-plan swaps (rebind, DESIGN.md §8): only the pin/evict deltas
+    # between the old and new schedules are moved — these fields must match
+    # Schedule.diff byte for byte
+    rebinds: int = 0
+    rebind_pinned_bytes: int = 0
+    rebind_evicted_bytes: int = 0
+    rebind_s: float = 0.0
 
 
 class PipelinedExecutor:
@@ -84,18 +91,66 @@ class PipelinedExecutor:
         self._final_dev = jnp.asarray(self.host["final_norm"])
         self._unembed_dev = (self._embed_dev.T if cfg.tie_embeddings
                              else jnp.asarray(self.host["unembed"]))
-        # pin once per schedule (paper pins identically across tiers)
+        # pin once per schedule (paper pins identically across tiers); the
+        # canonical pin set comes from the schedule itself so rebind() and
+        # Schedule.diff stay in exact agreement (DESIGN.md §8)
         self._pinned = {}
-        plan = schedule.tiers[min(schedule.tiers)].plan
-        for pl in plan.placements:
-            if pl.residency == "vram" and pl.sub.kind in ("attn", "ffn", "moe"):
-                self._pinned[pl.sub.name] = jax.device_put(
-                    self._subtree(pl.sub))
+        self._pinned_bytes = {}
+        for pl in schedule.pinned_placements():
+            self._pinned[pl.sub.name] = jax.device_put(self._subtree(pl.sub))
+            self._pinned_bytes[pl.sub.name] = pl.sub.weight_bytes
         self._pinned_names = set(self._pinned)
         self.engine = SubLayerEngine(cfg, self.policy) if jit_engine else None
         self.prefetch = PrefetchEngine(self._subtree) if overlap else None
         self._layer_ids = [jnp.asarray(i, jnp.int32)
                            for i in range(cfg.n_layers)]
+
+    # ------------------------------------------------------------ rebind
+    def rebind(self, schedule: Schedule) -> dict:
+        """Swap in a re-planned schedule live (DESIGN.md §8).
+
+        Applies only the pin/evict delta between the bound and the new
+        schedule: sub-layers leaving the pinned set drop their device
+        arrays, entering ones are ``device_put`` once — the unchanged
+        intersection is never touched, KV caches (owned by the caller) and
+        the jitted engine executables survive, so in-flight decode slots
+        keep their state and no step re-traces. Must be called between
+        passes (never while a prefetch session is staging).
+
+        Returns a report dict whose ``pinned_bytes``/``evicted_bytes``
+        equal the corresponding ``Schedule.diff`` fields.
+        """
+        assert self.prefetch is None or not self.prefetch.active, \
+            "rebind during an active prefetch session (mid-pass)"
+        t0 = time.perf_counter()
+        new_pins = {pl.sub.name: pl for pl in schedule.pinned_placements()}
+        to_evict = [n for n in self._pinned if n not in new_pins]
+        to_pin = [n for n in new_pins if n not in self._pinned]
+        evicted_bytes = 0
+        for name in to_evict:
+            del self._pinned[name]
+            evicted_bytes += self._pinned_bytes.pop(name)
+        pinned_bytes = 0
+        staged = []
+        for name in to_pin:
+            pl = new_pins[name]
+            tree = jax.device_put(self._subtree(pl.sub))
+            staged.append(tree)
+            self._pinned[name] = tree
+            self._pinned_bytes[name] = pl.sub.weight_bytes
+            pinned_bytes += pl.sub.weight_bytes
+        for tree in staged:
+            jax.block_until_ready(tree)
+        self.schedule = schedule
+        self._pinned_names = set(self._pinned)
+        dt = time.perf_counter() - t0
+        self.stats.rebinds += 1
+        self.stats.rebind_pinned_bytes += pinned_bytes
+        self.stats.rebind_evicted_bytes += evicted_bytes
+        self.stats.rebind_s += dt
+        return {"to_pin": to_pin, "to_evict": to_evict,
+                "pinned_bytes": pinned_bytes,
+                "evicted_bytes": evicted_bytes, "seconds": dt}
 
     # ------------------------------------------------------------ weights
     def _subtree(self, sub):
@@ -182,7 +237,9 @@ class PipelinedExecutor:
     def _begin_pass(self, tier: int):
         """Start one pass at ``tier``: begin the prefetch session over the
         tier plan's streamed placements and return ``(by_name, streaming)``
-        for ``_weights_for`` lookups."""
+        for ``_weights_for`` lookups. Scratch sizing is read from the bound
+        schedule's TierEntry each pass, so a live ``rebind`` re-sizes the
+        next session's staging budget automatically (DESIGN.md §8)."""
         entry = self.schedule.tiers[tier]
         plan = entry.plan
         self.stats.tiers_used.append(tier)
@@ -329,6 +386,6 @@ class PipelinedExecutor:
         tok = last_tokens
         for s in range(steps):
             logits, kv = self._run_chunk(tok, kv, pos + s)
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            tok = greedy_token(logits[:, -1:])
             out.append(np.asarray(tok)[:, 0])
         return np.stack(out, axis=1), kv

@@ -17,13 +17,21 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.costmodel import Placement, Plan, TimingEstimator
 from repro.core.sublayer import SubLayer
 from repro.core.system import InferenceSetting, SystemConfig
 
 TIERS = (1, 4, 16, 32, 64, 512, 1024, 2048, 4096, 8192, 16384)
+
+# Sub-layer kinds whose weights the executor actually pins on device (the
+# canonical pin set is the min-tier plan's vram placements of these kinds —
+# kv residency is tracked by the plans but the cache arrays live with the
+# executor/batcher, not the pin store). Schedule.diff and
+# PipelinedExecutor.rebind MUST agree on this set, byte for byte
+# (DESIGN.md §8).
+PINNED_COMPUTE_KINDS = ("attn", "ffn", "moe", "mamba")
 
 
 @dataclass
@@ -32,6 +40,43 @@ class TierEntry:
     est_time: float
     scratch_bytes: int = 0   # VRAM scratch granted at this tier
     act_bytes: int = 0       # activation reservation inside that scratch
+
+
+@dataclass
+class ScheduleDiff:
+    """Delta between two schedules over the same sub-layer graph — what a
+    live re-plan must move (DESIGN.md §8).
+
+    ``to_pin``/``to_evict`` list sub-layer names entering/leaving the
+    canonical pinned set (min-tier plan, ``PINNED_COMPUTE_KINDS``), in the
+    model's execution order; ``pin_bytes``/``evict_bytes`` are their weight
+    bytes — exactly the host->device / free traffic an incremental
+    ``PipelinedExecutor.rebind`` performs.  ``tier_plan_changes`` maps each
+    tier whose winning fundamental plan changed to ``(old, new)`` plan
+    names, and ``stream_bytes_changes`` to ``(old, new)`` per-pass streamed
+    weight bytes at that tier.
+    """
+    to_pin: List[str]
+    to_evict: List[str]
+    pin_bytes: int
+    evict_bytes: int
+    tier_plan_changes: Dict[int, Tuple[str, str]]
+    stream_bytes_changes: Dict[int, Tuple[int, int]]
+
+    @property
+    def moved_bytes(self) -> int:
+        return self.pin_bytes + self.evict_bytes
+
+    @property
+    def empty(self) -> bool:
+        return not (self.to_pin or self.to_evict or self.tier_plan_changes
+                    or self.stream_bytes_changes)
+
+    def summary(self) -> str:
+        return (f"pin {len(self.to_pin)} subs ({self.pin_bytes / 1e6:.1f}MB) "
+                f"evict {len(self.to_evict)} subs "
+                f"({self.evict_bytes / 1e6:.1f}MB), "
+                f"{len(self.tier_plan_changes)} tier plan changes")
 
 
 @dataclass
@@ -70,6 +115,49 @@ class Schedule:
 
     def plan_for_tokens(self, batch_tokens: int) -> Plan:
         return self.tiers[self.pick_tier(batch_tokens)].plan
+
+    # ------------------------------------------------------------ live diff
+    def pinned_placements(self) -> List[Placement]:
+        """Canonical executor pin set: the min-tier plan's vram placements
+        of ``PINNED_COMPUTE_KINDS``, in execution order. The paper pins
+        identically across tiers, so the smallest tier's plan is the single
+        source of truth for what is resident (DESIGN.md §8)."""
+        plan = self.tiers[min(self.tiers)].plan
+        return [p for p in plan.placements
+                if p.residency == "vram" and p.sub.kind in PINNED_COMPUTE_KINDS]
+
+    def pinned_weight_map(self) -> Dict[str, int]:
+        """name -> weight bytes for the canonical pinned set."""
+        return {p.sub.name: p.sub.weight_bytes for p in self.pinned_placements()}
+
+    def diff(self, new: "Schedule") -> ScheduleDiff:
+        """Pin/evict/stream deltas required to go from ``self`` to ``new``.
+
+        Both schedules must be built over the same sub-layer graph (same
+        names); the diff is what ``PipelinedExecutor.rebind`` applies
+        incrementally — moving only these bytes, never re-pinning the
+        unchanged intersection (DESIGN.md §8).
+        """
+        old_pins = self.pinned_weight_map()
+        new_pins = {p.sub.name: p.sub.weight_bytes
+                    for p in new.pinned_placements()}
+        to_pin = [n for n in new_pins if n not in old_pins]
+        to_evict = [n for n in old_pins if n not in new_pins]
+        plan_changes: Dict[int, Tuple[str, str]] = {}
+        stream_changes: Dict[int, Tuple[int, int]] = {}
+        for t in sorted(set(self.tiers) & set(new.tiers)):
+            po, pn = self.tiers[t].plan, new.tiers[t].plan
+            if po.name != pn.name:
+                plan_changes[t] = (po.name, pn.name)
+            so, sn = po.streamed_weight_bytes(), pn.streamed_weight_bytes()
+            if so != sn:
+                stream_changes[t] = (so, sn)
+        return ScheduleDiff(
+            to_pin=to_pin, to_evict=to_evict,
+            pin_bytes=sum(new_pins[n] for n in to_pin),
+            evict_bytes=sum(old_pins[n] for n in to_evict),
+            tier_plan_changes=plan_changes,
+            stream_bytes_changes=stream_changes)
 
 
 # Live activation buffers during one sub-layer step: residual x, normed

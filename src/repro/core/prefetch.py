@@ -69,6 +69,15 @@ class PrefetchEngine:
         self._staged: dict = {}
         self._sem: Optional[threading.Semaphore] = None
 
+    @property
+    def active(self) -> bool:
+        """True while a staging session is running. Live re-plans
+        (``PipelinedExecutor.rebind``, DESIGN.md §8) must wait for the pass
+        to finish: sessions size their scratch slots from the *bound*
+        schedule's tier entry, so a swap mid-session would leave staged
+        slots sized for the old scratch budget."""
+        return self._thread is not None
+
     # ------------------------------------------------------------ session
     @staticmethod
     def slots_for(order, avail_bytes: Optional[int]) -> int:

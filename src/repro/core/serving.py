@@ -29,6 +29,7 @@ import jax.numpy as jnp
 
 from repro.core.executor import PipelinedExecutor
 from repro.core.planner import Schedule
+from repro.models.common import greedy_token
 
 
 @dataclass
@@ -52,6 +53,20 @@ class Request:
         return len(self.generated) >= self.max_new_tokens
 
 
+def random_requests(vocab: int, n: int, prompt_len: int,
+                    max_new_tokens: int, seed: int = 0,
+                    rid_base: int = 0) -> List["Request"]:
+    """Uniform-random request batch (the shape every demo/benchmark wave
+    uses): ``n`` requests of ``prompt_len`` int32 tokens drawn from a
+    seeded RNG, so identically-parameterised waves are comparable
+    token-for-token across runs and budgets."""
+    rng = np.random.RandomState(seed)
+    return [Request(rid=rid_base + i,
+                    prompt=rng.randint(0, vocab, size=prompt_len)
+                    .astype(np.int32), max_new_tokens=max_new_tokens)
+            for i in range(n)]
+
+
 class ContinuousBatcher:
     """Serves a stream of requests under a pipelined-sharding schedule.
 
@@ -60,19 +75,37 @@ class ContinuousBatcher:
     tier-chunked schedule while existing slots keep decoding.
     """
 
-    def __init__(self, cfg, params, schedule: Schedule, max_batch: int = 4,
-                 max_seq: int = 256, fused: bool = True, overlap: bool = True,
-                 jit_engine: bool = True):
+    def __init__(self, cfg, params, schedule: Schedule = None,
+                 max_batch: int = 4, max_seq: int = 256, fused: bool = True,
+                 overlap: bool = True, jit_engine: bool = True,
+                 executor: Optional[PipelinedExecutor] = None,
+                 session=None):
         self.cfg = cfg
-        self.schedule = schedule
+        self._session = session
+        if executor is not None:
+            # constructor-from-session path (DESIGN.md §8): share a live
+            # executor instead of building one, so a Session can rebind the
+            # schedule under this batcher without dropping its KV slots
+            self.ex = executor
+            self.schedule = executor.schedule
+            self.max_seq = executor.max_seq
+            jit_engine = executor.engine is not None
+        else:
+            self.schedule = schedule
+            self.max_seq = max_seq
+            self.ex = PipelinedExecutor(cfg, params, schedule,
+                                        max_seq=max_seq, overlap=overlap,
+                                        jit_engine=jit_engine)
         self.max_batch = max_batch
-        self.max_seq = max_seq
-        self.ex = PipelinedExecutor(cfg, params, schedule, max_seq=max_seq,
-                                    overlap=overlap, jit_engine=jit_engine)
         # the fused step runs through the jitted engine's batched decode
         self.fused = fused and jit_engine
         self.kv = self.ex.init_kv(max_batch)
         self.slots: List[Optional[Request]] = [None] * max_batch
+        # admission queue OUTLIVES serve() calls: a paused serve (relative
+        # max_iterations) may return before every request found a free
+        # slot, and the resume call — serve([]) after a rebudget — must
+        # still admit them
+        self.pending: List[Request] = []
         self.last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.iterations = 0
         self.tier_log = []
@@ -83,17 +116,53 @@ class ContinuousBatcher:
         self.iter_streamed_bytes: List[int] = []
         self.iter_moved_bytes: List[int] = []
         self._serve_wall_s = 0.0
+        self.rebudget_log: List[dict] = []
+
+    # ------------------------------------------------------------ session
+    @classmethod
+    def from_session(cls, session, max_batch: int = 4, fused: bool = True):
+        """Batcher over a Session's live executor (DESIGN.md §8): the
+        session owns install/planning and can re-plan under it
+        (``session.update_budget`` / ``batcher.rebudget``) — in-flight
+        decode slots survive because the executor only swaps pinned
+        weights, never the KV stacks this batcher holds."""
+        return cls(session.cfg, None, max_batch=max_batch, fused=fused,
+                   executor=session.executor, session=session)
+
+    def rebudget(self, new_budget_bytes: int):
+        """Re-plan the session under a new VRAM budget between iterations
+        (the IGI mid-session memory-pressure scenario, DESIGN.md §8).
+        Returns the applied ``ScheduleDiff``; generated tokens are
+        unaffected — only weight residency (and thus per-pass transfer
+        traffic) changes."""
+        if self._session is None:
+            raise RuntimeError("rebudget() needs a session-backed batcher "
+                               "(ContinuousBatcher.from_session)")
+        diff = self._session.update_budget(new_budget_bytes)
+        self.rebudget_log.append({"iteration": self.iterations,
+                                  "budget_bytes": new_budget_bytes,
+                                  "diff": diff})
+        return diff
+
+    def _bind_schedule(self, schedule: Schedule):
+        """Adopt a re-planned schedule (called by the owning Session after
+        the executor rebind; tier picks from the next iteration use it)."""
+        self.schedule = schedule
 
     # ------------------------------------------------------------ admit
     def _admit(self, queue: List[Request]):
         for i in range(self.max_batch):
             if self.slots[i] is None and queue:
                 req = queue.pop(0)
+                # validate BEFORE taking the slot: a rejected request must
+                # not occupy it (a caller catching the ValueError and
+                # serving on would otherwise decode the slot against an
+                # unwritten KV cache)
+                self._validate(req)
                 self.slots[i] = req
                 self._prefill_slot(i, req)
 
-    def _prefill_slot(self, slot: int, req: Request):
-        """Chunked prefill of one request at the planner-picked tier."""
+    def _validate(self, req: Request):
         T = len(req.prompt)
         if T == 0:
             raise ValueError(f"request {req.rid} has an empty prompt")
@@ -103,6 +172,10 @@ class ContinuousBatcher:
             raise ValueError(
                 f"request {req.rid}: prompt ({T}) + max_new_tokens "
                 f"({req.max_new_tokens}) exceeds max_seq ({self.max_seq})")
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Chunked prefill of one request at the planner-picked tier."""
+        T = len(req.prompt)
         tier = self.schedule.pick_tier(T)
         chunk = max(1, min(T, tier))
         pos = 0
@@ -111,7 +184,7 @@ class ContinuousBatcher:
             end = min(T, pos + chunk)
             logits = self._run_slot(slot, tokens[:, pos:end], pos)
             pos = end
-        nxt = int(jnp.argmax(logits[0, -1]))
+        nxt = int(greedy_token(logits[0, -1]))
         req.generated.append(nxt)
         req.first_token_at = time.perf_counter()
         req.pos = T
@@ -174,7 +247,7 @@ class ContinuousBatcher:
         logits, self.kv = self.ex._run_decode(
             self.last_tokens, self.kv, jnp.asarray(pos_vec),
             jnp.asarray(mask), n_active=len(active))
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        nxt = np.asarray(greedy_token(logits[:, -1]))
         for i in active:
             self._advance(i, int(nxt[i]))
 
@@ -193,7 +266,7 @@ class ContinuousBatcher:
             for i in active:
                 logits = self._run_slot(i, self.last_tokens[i:i + 1],
                                         self.slots[i].pos)
-                self._advance(i, int(jnp.argmax(logits[0, -1])))
+                self._advance(i, int(greedy_token(logits[0, -1])))
             return
         pos_vec = np.zeros((self.max_batch,), np.int32)
         for i in active:
@@ -206,7 +279,7 @@ class ContinuousBatcher:
             logits, self.kv = self.ex._run_decode(
                 self.last_tokens, self.kv, pos_vec, jnp.asarray(mask),
                 n_active=1)
-            self._advance(i, int(jnp.argmax(logits[i, -1])))
+            self._advance(i, int(greedy_token(logits[i, -1])))
 
     def _advance(self, slot: int, token: int):
         req = self.slots[slot]
@@ -218,11 +291,18 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------ loop
     def serve(self, requests: List[Request], max_iterations: int = 10_000):
-        queue = list(requests)
+        """Admit + decode until the queue drains or ``max_iterations``
+        iterations *of this call* have run — relative, so a paused serve on
+        a live batcher (e.g. around a ``rebudget`` swap) can resume with
+        ``serve([])`` and in-flight slots keep decoding. Requests that never
+        reached a free slot before the pause stay in ``self.pending`` and
+        are admitted by the resume call — a pause never drops work."""
+        self.pending.extend(requests)
+        start = self.iterations
         t0 = time.perf_counter()
-        while (queue or any(s is not None for s in self.slots)) \
-                and self.iterations < max_iterations:
-            self._admit(queue)
+        while (self.pending or any(s is not None for s in self.slots)) \
+                and self.iterations - start < max_iterations:
+            self._admit(self.pending)
             self._decode_iteration()
             self.iterations += 1
         self._serve_wall_s += time.perf_counter() - t0
@@ -250,4 +330,7 @@ class ContinuousBatcher:
                                          if iters else 0.0),
             "mean_iter_moved_bytes": (float(np.mean(self.iter_moved_bytes))
                                       if self.iter_moved_bytes else 0.0),
+            # live re-plans applied under this batcher (DESIGN.md §8)
+            "rebudgets": len(self.rebudget_log),
+            "rebind_s": self.ex.stats.rebind_s,
         }

@@ -1,9 +1,11 @@
-"""Serving launcher — pipelined sharding as the first-class entrypoint.
+"""Serving launcher — the Session façade as the first-class entrypoint.
 
-Takes a model + an HBM/VRAM budget, runs the install-phase profile, plans
-the tier table (Algorithm 1), then serves batched requests through the
-two-tier executor. Also prints the planner's TTFT/TPS estimates for the
-target system so the schedule is inspectable before deployment.
+Opens a planning-only ``repro.Session`` for the full model against the
+HBM/VRAM budget (install-phase profile + Algorithm 1 tier table), prints
+the planner's TTFT/TPS estimates, then opens an executing Session at smoke
+scale and serves batched requests through it — including a live
+``update_budget`` swap mid-run to demonstrate the paper's mid-session
+VRAM-pressure scenario (DESIGN.md §8).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen30b-a3b \
         --hbm-budget-gb 4 --batch 4
@@ -13,14 +15,10 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-
+from repro import Session
 from repro.configs import get_config, get_smoke_config, list_archs
-from repro.core import (SYSTEMS, InferenceSetting, PipelinedExecutor,
-                        TimingEstimator, build_graph, build_schedule,
-                        estimate_tps, estimate_ttft, run_install)
-from repro.models import build_model
+from repro.core import SYSTEMS, InferenceSetting, build_graph, run_install
+from repro.core.serving import random_requests
 
 
 def main():
@@ -37,14 +35,15 @@ def main():
 
     system = SYSTEMS[args.system]
     budget = int(args.hbm_budget_gb * 1e9)
-
-    # ---- plan the FULL model against the budget (install + planning phase)
-    full = get_config(args.arch)
-    subs = build_graph(full, wdtype=2)
     db = run_install(system, quick=True)
-    est = TimingEstimator(db, system)
-    setting = InferenceSetting(batch=args.batch, context=args.context)
-    sched = build_schedule(budget, subs, est, setting)
+
+    # ---- plan the FULL model against the budget (planning-only Session:
+    # no weights are ever allocated)
+    full = get_config(args.arch)
+    plan = Session.open(full, system, budget,
+                        InferenceSetting(batch=args.batch,
+                                         context=args.context), db=db)
+    sched = plan.schedule
     print(f"[serve] {full.name} ({full.param_count()/1e9:.1f}B) @ "
           f"{args.hbm_budget_gb}G on {system.name}: "
           f"pinned {sched.pinned_bytes/1e9:.2f}G "
@@ -53,9 +52,9 @@ def main():
         t = sched.pick_tier(tokens)
         print(f"[serve]   {label:7s}: tier {t:5d} plan "
               f"{sched.tiers[t].plan.name}")
-    print(f"[serve]   est TTFT({args.context}) "
-          f"{estimate_ttft(sched, args.context):.2f}s | est TPS "
-          f"{estimate_tps(sched, args.batch):.1f}")
+    est = plan.estimates(args.context)
+    print(f"[serve]   est TTFT({args.context}) {est['ttft_s']:.2f}s | "
+          f"est TPS {est['tps']:.1f}")
 
     # ---- execute for real at reduced scale (CPU two-tier simulation)
     cfg = get_smoke_config(args.arch)
@@ -63,27 +62,32 @@ def main():
         print("[serve] executor demo covers dense/moe; planning-only for "
               f"family {cfg.family}")
         return
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    ssubs = build_graph(cfg, wdtype=2)
-    stotal = sum(s.weight_bytes for s in ssubs)
-    ssched = build_schedule(
-        max(int(stotal * args.hbm_budget_gb / system.vram_gb), 1), ssubs,
-        TimingEstimator(db, system), InferenceSetting(batch=args.batch,
-                                                      context=128))
-    ex = PipelinedExecutor(cfg, params, ssched, max_seq=128)
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab)
+    stotal = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+    sbudget = max(int(stotal * args.hbm_budget_gb / system.vram_gb), 1)
+    sess = Session.open(cfg, system, sbudget,
+                        InferenceSetting(batch=args.batch, context=128),
+                        db=db, max_seq=128)
+    reqs = random_requests(cfg.vocab, args.batch, args.prompt_len,
+                           args.new_tokens, seed=1)
     t0 = time.perf_counter()
-    last, kv, pos = ex.prefill(prompts)
-    gen, _ = ex.decode(jnp.argmax(last, -1).astype(jnp.int32), kv, pos,
-                       steps=args.new_tokens)
+    sess.serve(reqs, max_batch=args.batch)
     dt = time.perf_counter() - t0
-    print(f"[serve] smoke-scale execution: {args.batch} requests x "
+    st = sess.stats()
+    print(f"[serve] smoke-scale serving: {args.batch} requests x "
           f"{args.new_tokens} tokens in {dt:.2f}s | streamed "
-          f"{ex.stats.streamed_bytes/1e6:.1f}MB, engines "
-          f"{ex.stats.engine_calls}, tiers {sorted(set(ex.stats.tiers_used))}")
-    print(f"[serve] sample continuation: {gen[0].tolist()}")
+          f"{st['executor']['streamed_bytes']/1e6:.1f}MB, engines "
+          f"{st['executor']['engine_calls']}, aggregate TPS "
+          f"{st['serving']['aggregate_tps']:.1f}")
+    print(f"[serve] sample continuation: {reqs[0].generated}")
+
+    # ---- live re-plan: a game claimed half the VRAM mid-session
+    diff = sess.update_budget(max(sbudget // 2, 1))
+    more = random_requests(cfg.vocab, args.batch, args.prompt_len,
+                           args.new_tokens, seed=2, rid_base=100)
+    sess.serve(more)
+    print(f"[serve] rebudget to {args.hbm_budget_gb/2:.1f}G-equivalent: "
+          f"moved only {diff.moved_bytes/1e6:.2f}MB "
+          f"({diff.summary()}); serving continued")
 
 
 if __name__ == "__main__":

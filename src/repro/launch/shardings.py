@@ -245,9 +245,13 @@ class ShardingPolicy:
         negligible fraction of the bytes.
         """
         def conv(s):
-            kind = ("pinned_host"
-                    if self.offload_opt and len(s.spec) >= 2 else "device")
-            return NamedSharding(self.mesh, s.spec, memory_kind=kind)
+            if self.offload_opt and len(s.spec) >= 2:
+                return NamedSharding(self.mesh, s.spec,
+                                     memory_kind="pinned_host")
+            # default memory kind (== "device" where that kind exists; the
+            # explicit name is rejected by older CPU backends that only
+            # expose unpinned_host)
+            return NamedSharding(self.mesh, s.spec)
         mv = jax.tree.map(conv, params_sharding)
         return {"m": mv, "v": jax.tree.map(lambda s: s, mv),
                 "step": NamedSharding(self.mesh, P())}

@@ -23,6 +23,21 @@ class NoPolicy:
         return None
 
 
+# ---------------------------------------------------------------- sampling
+def greedy_token(logits):
+    """Deterministic greedy pick over a logits row (or batch of rows).
+
+    Every greedy path — the served executor, the Session generate loop and
+    the monolithic reference in tests — must sample through this one
+    helper: argmax over float32-upcast logits along the last axis, ties
+    broken toward the lowest token index (jnp.argmax's stable rule). bf16
+    logits tie exactly all the time at smoke scale, so a pick made on a
+    different dtype or layout diverges on tie-order even when the logits
+    agree bitwise.
+    """
+    return jnp.argmax(logits.astype(jnp.float32), axis=-1).astype(jnp.int32)
+
+
 # ---------------------------------------------------------------- norms
 def rmsnorm(x, scale, eps):
     dt = x.dtype

@@ -20,6 +20,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.common import dense_init
 
+# jax.shard_map graduated from jax.experimental in 0.5; support both
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - exercised on jax<0.5 runtimes (e.g. CI 0.4.x)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 # ---------------------------------------------------------------- dense ffn
 def init_ffn_params(key, cfg, dtype, d_ff=None):
@@ -187,7 +193,7 @@ def moe_ffn_ep(params, cfg, x, policy):
     in_specs = (batch_spec, P()) + tuple(
         P(ep_axis, None, None) for _ in wkeys)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
+    @partial(_shard_map, mesh=mesh, in_specs=in_specs,
              out_specs=batch_spec)
     def _sharded(xl, router, *ws):
         rank = jax.lax.axis_index(ep_axis)

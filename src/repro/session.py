@@ -1,0 +1,240 @@
+"""`repro.Session` — one front door for plan -> install -> serve, with live
+re-planning under changing VRAM budgets (DESIGN.md §8).
+
+The paper's headline is not just fast offloaded inference but inference that
+"flexibly adapts to system and inference conditions": the IGI-SDK scenario
+where a game claims or releases VRAM mid-session and the scheduler must
+re-plan without dropping in-flight requests. A Session owns that lifecycle:
+
+    s = Session.open(cfg, system=CLI2, budget_bytes=2 << 30)
+    tokens = s.generate(prompts, max_new_tokens=16)   # prefill + decode
+    s.serve(requests)                                 # continuous batching
+    diff = s.update_budget(1 << 30)                   # live re-plan: moves
+    s.serve(more)                                     #   only diff bytes
+
+``open`` runs (or reuses) the install-phase profile DB, shards the model
+into sub-layers, and plans the tier table; the executor, model parameters
+and the continuous batcher are built lazily on first use, so planning-only
+sessions (full-size configs) never allocate weights.
+
+``update_budget`` / ``update_setting`` re-run the planner under the new
+conditions, diff the old vs new pinned sets (``Schedule.diff``) and apply
+the delta incrementally (``PipelinedExecutor.rebind``): only changed
+sub-layer weights are pinned/evicted, the stacked KV caches and the jitted
+engine executables survive, so in-flight decode slots keep generating the
+exact same tokens across the swap.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import List, Optional, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (SYSTEMS, InferenceSetting, PipelinedExecutor,
+                        Schedule, ScheduleDiff, SystemConfig, TimingEstimator,
+                        build_graph, build_schedule, estimate_tps,
+                        estimate_ttft, run_install)
+from repro.core.planner import TIERS
+from repro.core.serving import ContinuousBatcher, Request
+from repro.models import build_model
+from repro.models.common import greedy_token
+
+
+class Session:
+    """Owns profile DB + schedule + executor + batcher for one model on one
+    system, and re-plans live when the conditions change (DESIGN.md §8)."""
+
+    def __init__(self, cfg, system: SystemConfig, budget_bytes: int,
+                 setting: InferenceSetting, *, db=None, params=None,
+                 wdtype: float = 2.0, max_seq: int = 256, tiers=TIERS,
+                 overlap: bool = True, jit_engine: bool = True,
+                 quick_install: bool = True):
+        self.cfg = cfg
+        self.system = system
+        self.setting = setting
+        self.budget_bytes = budget_bytes
+        self.max_seq = max_seq
+        self.tiers = tiers
+        self.overlap = overlap
+        self.jit_engine = jit_engine
+        self.db = db if db is not None else run_install(system,
+                                                        quick=quick_install)
+        self.est = TimingEstimator(self.db, system)
+        self.subs = build_graph(cfg, wdtype=wdtype)
+        self.schedule: Schedule = build_schedule(budget_bytes, self.subs,
+                                                 self.est, setting, tiers)
+        self.replan_log: List[ScheduleDiff] = []
+        self._params = params
+        self._executor: Optional[PipelinedExecutor] = None
+        self._batcher: Optional[ContinuousBatcher] = None
+        self._batcher_cfg = None   # (max_batch, fused) as requested
+
+    # ------------------------------------------------------------ open
+    @classmethod
+    def open(cls, cfg, system: Union[SystemConfig, str] = "cli2",
+             budget_bytes: int = 4 << 30,
+             setting: Optional[InferenceSetting] = None, **kw) -> "Session":
+        """Install (or reuse a profile DB via ``db=``), plan the tier table,
+        and return a Session ready to generate/serve. ``system`` accepts a
+        ``SystemConfig`` or a name from ``repro.core.SYSTEMS``."""
+        if isinstance(system, str):
+            system = SYSTEMS[system]
+        return cls(cfg, system, budget_bytes,
+                   setting or InferenceSetting(), **kw)
+
+    # ------------------------------------------------------------ lazy build
+    @property
+    def params(self):
+        if self._params is None:
+            self._params = build_model(self.cfg).init(jax.random.PRNGKey(0))
+        return self._params
+
+    @property
+    def executor(self) -> PipelinedExecutor:
+        """The bound executor (built on first use; planning-only sessions
+        never construct it)."""
+        if self._executor is None:
+            assert self.cfg.family in ("dense", "moe"), \
+                "execution covers the dense/moe families; this session is " \
+                "planning-only"
+            self._executor = PipelinedExecutor(
+                self.cfg, self.params, self.schedule, max_seq=self.max_seq,
+                overlap=self.overlap, jit_engine=self.jit_engine)
+        return self._executor
+
+    def batcher(self, max_batch: Optional[int] = None,
+                fused: Optional[bool] = None) -> ContinuousBatcher:
+        """The session's continuous batcher. Created on first call (with
+        ``max_batch=4, fused=True`` defaults); later calls return the same
+        live batcher, slots and all — ``None`` means "keep as built", and a
+        conflicting explicit value raises instead of being silently
+        ignored (the KV layout is fixed at the executor)."""
+        if self._batcher is None:
+            mb = 4 if max_batch is None else max_batch
+            fu = True if fused is None else fused
+            self._batcher = ContinuousBatcher.from_session(
+                self, max_batch=mb, fused=fu)
+            # remember the REQUESTED values: the batcher's own .fused is
+            # the effective one (anded with jit_engine), and comparing
+            # against that would reject a repeat of the original argument
+            self._batcher_cfg = (mb, fu)
+            return self._batcher
+        mb_built, fu_built = self._batcher_cfg
+        if max_batch is not None and max_batch != mb_built:
+            raise ValueError(
+                f"session batcher was built with max_batch={mb_built}; "
+                f"cannot serve with {max_batch} (close() the session to "
+                "rebuild)")
+        if fused is not None and fused != fu_built:
+            raise ValueError(
+                f"session batcher was built with fused={fu_built}; cannot "
+                f"serve with fused={fused} (close() the session to "
+                "rebuild)")
+        return self._batcher
+
+    # ------------------------------------------------------------ inference
+    def generate(self, prompts, max_new_tokens: int = 8) -> np.ndarray:
+        """Greedy batch generation: chunked prefill at the planner-picked
+        tier, then decode. prompts: (B, T) int tokens; returns (B,
+        max_new_tokens) numpy tokens."""
+        ex = self.executor
+        tokens = jnp.asarray(np.asarray(prompts), jnp.int32)
+        last, kv, pos = ex.prefill(tokens)
+        gen, _ = ex.decode(greedy_token(last), kv, pos,
+                           steps=max_new_tokens)
+        return gen
+
+    def serve(self, requests: List[Request],
+              max_batch: Optional[int] = None, fused: Optional[bool] = None,
+              max_iterations: int = 10_000):
+        """Continuous batching through the session's executor. Repeated
+        calls reuse the same batcher (``None`` args keep its build-time
+        configuration), so a paused serve (``max_iterations``) can be
+        resumed — across ``update_budget`` swaps — without losing
+        in-flight slots."""
+        b = self.batcher(max_batch=max_batch, fused=fused)
+        return b.serve(requests, max_iterations=max_iterations)
+
+    # ------------------------------------------------------------ re-plan
+    def update_budget(self, new_budget_bytes: int) -> ScheduleDiff:
+        """Re-plan under a new VRAM/HBM budget and apply the delta live
+        (DESIGN.md §8). Returns the ``Schedule.diff`` whose pin/evict bytes
+        are exactly what the executor moved."""
+        return self._replan(budget_bytes=new_budget_bytes)
+
+    def update_setting(self, **changes) -> ScheduleDiff:
+        """Re-plan under changed inference conditions (batch, context,
+        dtypes — any ``InferenceSetting`` field) and apply the delta live."""
+        return self._replan(setting=replace(self.setting, **changes))
+
+    def _replan(self, budget_bytes: Optional[int] = None,
+                setting: Optional[InferenceSetting] = None) -> ScheduleDiff:
+        if budget_bytes is not None:
+            self.budget_bytes = budget_bytes
+        if setting is not None:
+            self.setting = setting
+        new = build_schedule(self.budget_bytes, self.subs, self.est,
+                             self.setting, self.tiers)
+        diff = self.schedule.diff(new)
+        if self._executor is not None:
+            report = self._executor.rebind(new)
+            assert report["pinned_bytes"] == diff.pin_bytes \
+                and report["evicted_bytes"] == diff.evict_bytes, \
+                "executor rebind moved different bytes than Schedule.diff"
+        if self._batcher is not None:
+            self._batcher._bind_schedule(new)
+        self.schedule = new
+        self.replan_log.append(diff)
+        return diff
+
+    # ------------------------------------------------------------ estimates
+    def estimates(self, isl: Optional[int] = None) -> dict:
+        """Planner-side TTFT/TPS estimates for the bound conditions."""
+        isl = isl if isl is not None else self.setting.context
+        return {"ttft_s": estimate_ttft(self.schedule, isl),
+                "tps": estimate_tps(self.schedule, self.setting.batch),
+                "pinned_bytes": self.schedule.pinned_bytes,
+                "scratch_bytes": self.schedule.scratch_bytes}
+
+    def stats(self) -> dict:
+        """Lifecycle stats: planning + (if built) executor + batcher."""
+        out = {"budget_bytes": self.budget_bytes,
+               "system": self.system.name,
+               "replans": len(self.replan_log),
+               "pinned_bytes": self.schedule.pinned_bytes,
+               "scratch_bytes": self.schedule.scratch_bytes}
+        if self._executor is not None:
+            ex = self._executor.stats
+            out["executor"] = {
+                "streamed_bytes": ex.streamed_bytes,
+                "staged_bytes": ex.staged_bytes,
+                "engine_calls": dict(ex.engine_calls),
+                "copy_s_hidden": ex.copy_s_hidden,
+                "copy_s_exposed": ex.copy_s_exposed,
+                "rebinds": ex.rebinds,
+                "rebind_pinned_bytes": ex.rebind_pinned_bytes,
+                "rebind_evicted_bytes": ex.rebind_evicted_bytes,
+                "rebind_s": ex.rebind_s,
+            }
+        if self._batcher is not None:
+            out["serving"] = self._batcher.stats()
+        return out
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self):
+        """Drop executor/batcher references (device arrays become
+        collectable); the session stays usable for planning."""
+        self._batcher = None
+        self._batcher_cfg = None
+        self._executor = None
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -22,12 +22,13 @@ SCRIPT = textwrap.dedent("""
     from repro.configs import get_smoke_config
     from repro.models import build_model
     from repro.models.api import cross_entropy
+    from repro.launch.mesh import make_mesh
     from repro.launch.shardings import make_policy
     from repro.config import ShapeConfig
 
     assert len(jax.devices()) == 8
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # version-compat constructor: jax.sharding.AxisType only exists >= 0.5
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     for arch in ("qwen3-32b", "qwen3-moe-235b-a22b"):
         cfg = get_smoke_config(arch)
@@ -58,8 +59,7 @@ SCRIPT = textwrap.dedent("""
         print(f"OK {arch}: sharded loss {sharded:.4f} == ref {ref:.4f}")
 
     # multi-pod reduced dry-run: (2,2,2) mesh lower+compile train_step
-    mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = get_smoke_config("yi-9b")
     model = build_model(cfg)
     from repro.launch.steps import make_train_step

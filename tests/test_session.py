@@ -1,0 +1,207 @@
+"""Session lifecycle + live re-planning (DESIGN.md §8).
+
+The headline invariant: ``session.update_budget()`` on a live batcher with
+in-flight decode slots (1) produces bit-identical remaining tokens to an
+uninterrupted run at the final budget, (2) moves exactly the sub-layer
+bytes ``Schedule.diff`` reports — never a full re-pin — and (3) keeps the
+jitted engine executables (no re-trace after the swap)."""
+import numpy as np
+import pytest
+
+from repro import Session
+from repro.configs import get_smoke_config
+from repro.core import CLI2, InferenceSetting, build_graph, run_install
+from repro.core.serving import Request
+from repro.session import Session as SessionAlias
+
+
+@pytest.fixture(scope="module")
+def db():
+    return run_install(CLI2, quick=True)
+
+
+@pytest.fixture(scope="module")
+def arch():
+    cfg = get_smoke_config("yi-9b")
+    total = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+    return cfg, total
+
+
+def open_session(cfg, total, frac, db, batch=2):
+    return Session.open(cfg, CLI2, int(total * frac) + 1,
+                        InferenceSetting(batch=batch, context=64),
+                        db=db, max_seq=64)
+
+
+def requests(cfg, n=2, max_new=8):
+    rng = np.random.RandomState(0)
+    return [Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=6 + 3 * i)
+                    .astype(np.int32), max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def test_session_reexported_at_top_level():
+    assert Session is SessionAlias
+
+
+def test_planning_only_session_builds_no_executor(arch, db):
+    cfg, total = arch
+    s = open_session(cfg, total, 0.5, db)
+    est = s.estimates(32)
+    assert est["tps"] > 0 and "ttft_s" in est
+    assert s.schedule.pick_tier(1) >= 1
+    assert s._executor is None and s._batcher is None  # still lazy
+    assert s.stats()["replans"] == 0 and "executor" not in s.stats()
+
+
+def test_update_budget_mid_stream_bit_identity(arch, db):
+    """The acceptance criterion: pause a serve with slots mid-decode, halve
+    the budget, drain — every request's tokens must equal an uninterrupted
+    run at the final budget, and the executor must have moved only the
+    Schedule.diff bytes (pins surviving the swap keep their device arrays,
+    nothing is re-pinned)."""
+    cfg, total = arch
+    live = open_session(cfg, total, 2.0, db)
+    reqs = requests(cfg)
+    live.serve(reqs, max_batch=2, max_iterations=2)
+    assert any(sl is not None for sl in live.batcher().slots), \
+        "fixture bug: no in-flight slots at the swap point"
+    traces = dict(live.executor.engine.trace_counts)
+    pinned_before = dict(live.executor._pinned)
+
+    diff = live.update_budget(int(total * 1.0) + 1)
+    assert diff.to_evict, "fixture bug: budget step did not change pins"
+    ex = live.executor.stats
+    # rebind moved exactly the diffed bytes (incremental, not a re-pin) ...
+    assert ex.rebinds == 1
+    assert ex.rebind_pinned_bytes == diff.pin_bytes
+    assert ex.rebind_evicted_bytes == diff.evict_bytes
+    # ... and pins surviving the swap kept their exact device arrays
+    survivors = set(pinned_before) - set(diff.to_evict)
+    assert survivors, "fixture bug: swap evicted every pin"
+    for name in survivors:
+        assert live.executor._pinned[name] is pinned_before[name]
+
+    live.serve([])  # drain in-flight slots under the new schedule
+    assert all(r.done for r in reqs)
+    # no step re-traced across the swap (executables survived)
+    assert dict(live.executor.engine.trace_counts) == traces
+
+    fresh = open_session(cfg, total, 1.0, db)
+    ref = requests(cfg)
+    fresh.serve(ref, max_batch=2)
+    for a, b in zip(reqs, ref):
+        assert a.generated == b.generated, \
+            f"req {a.rid}: {a.generated} != {b.generated} across rebudget"
+
+
+def test_update_budget_diff_symmetry(arch, db):
+    """Growing the budget pins what shrinking evicted; executor accounting
+    follows both directions."""
+    cfg, total = arch
+    s = open_session(cfg, total, 2.0, db)
+    s.generate(np.zeros((2, 4), np.int32), 2)  # force executor build
+    down = s.update_budget(int(total * 0.1) + 1)
+    up = s.update_budget(int(total * 2.0) + 1)
+    assert down.to_evict == up.to_pin
+    assert down.evict_bytes == up.pin_bytes
+    ex = s.executor.stats
+    assert ex.rebinds == 2
+    assert ex.rebind_pinned_bytes == down.pin_bytes + up.pin_bytes
+    assert ex.rebind_evicted_bytes == down.evict_bytes + up.evict_bytes
+    assert len(s.replan_log) == 2
+
+
+def test_update_setting_replans(arch, db):
+    cfg, total = arch
+    s = open_session(cfg, total, 0.5, db)
+    old_sched = s.schedule
+    diff = s.update_setting(context=128, batch=4)
+    assert s.setting.context == 128 and s.setting.batch == 4
+    assert s.schedule is not old_sched
+    assert s.replan_log == [diff]
+
+
+def test_batcher_rebudget_hook(arch, db):
+    """serving-side entry point: ContinuousBatcher.rebudget delegates to the
+    session and logs the applied diff at the current iteration."""
+    cfg, total = arch
+    s = open_session(cfg, total, 2.0, db)
+    reqs = requests(cfg, max_new=6)
+    s.serve(reqs, max_batch=2, max_iterations=2)
+    b = s.batcher()
+    diff = b.rebudget(int(total * 0.1) + 1)
+    assert b.rebudget_log[-1]["diff"] is diff
+    assert b.rebudget_log[-1]["iteration"] == b.iterations
+    assert b.schedule is s.schedule  # batcher tier picks use the new plan
+    s.serve([])
+    assert all(r.done for r in reqs)
+    st = b.stats()
+    assert st["rebudgets"] == 1 and st["rebind_s"] >= 0.0
+
+
+def test_rebudget_without_session_raises(arch, db):
+    cfg, total = arch
+    from repro.core.serving import ContinuousBatcher
+    from repro.models import build_model
+    import jax
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    s = open_session(cfg, total, 0.5, db)
+    b = ContinuousBatcher(cfg, params, s.schedule, max_batch=2, max_seq=64)
+    with pytest.raises(RuntimeError):
+        b.rebudget(int(total * 0.1))
+
+
+def test_paused_serve_keeps_unadmitted_requests(arch, db):
+    """A pause must never drop work: requests that found no free slot
+    before max_iterations stay queued on the batcher and are admitted by
+    the resume call (here: across a rebudget swap)."""
+    cfg, total = arch
+    s = open_session(cfg, total, 2.0, db)
+    reqs = requests(cfg, n=4, max_new=3)  # 4 requests, only 2 slots
+    s.serve(reqs, max_batch=2, max_iterations=1)
+    assert s.batcher().pending, "fixture bug: queue drained before pause"
+    s.update_budget(int(total * 1.0) + 1)
+    s.serve([])
+    assert all(r.done for r in reqs)
+    assert not s.batcher().pending
+
+
+def test_batcher_config_conflicts_raise(arch, db):
+    """A live batcher's KV layout is fixed: later serve() calls must not
+    silently ignore conflicting max_batch/fused (None keeps the build)."""
+    cfg, total = arch
+    s = open_session(cfg, total, 0.5, db)
+    reqs = requests(cfg, n=1, max_new=2)
+    s.serve(reqs, max_batch=2)
+    s.serve([])          # None args: keep the built configuration
+    with pytest.raises(ValueError, match="max_batch"):
+        s.serve([], max_batch=4)
+    with pytest.raises(ValueError, match="fused"):
+        s.serve([], fused=False)
+
+
+def test_rejected_request_does_not_occupy_slot(arch, db):
+    """Admission validates BEFORE taking the slot: a caller that catches
+    the rejection and serves on must find the slot free and the KV-less
+    request absent, not decoding from an unwritten cache."""
+    cfg, total = arch
+    s = open_session(cfg, total, 0.5, db)
+    rng = np.random.RandomState(3)
+    bad = Request(rid=99, prompt=rng.randint(0, cfg.vocab, size=60)
+                  .astype(np.int32), max_new_tokens=30)  # 90 > max_seq 64
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        s.serve([bad], max_batch=2)
+    b = s.batcher()
+    assert all(sl is None for sl in b.slots)
+    ok = requests(cfg, n=2, max_new=3)
+    s.serve(ok)
+    assert all(r.done for r in ok)
+
+
+def test_generate_identical_across_budgets(arch, db):
+    cfg, total = arch
+    prompts = np.random.RandomState(1).randint(0, cfg.vocab, (2, 8))
+    tok = [open_session(cfg, total, f, db).generate(prompts, 4)
+           for f in (2.0, 0.05)]
+    assert np.array_equal(tok[0], tok[1])
