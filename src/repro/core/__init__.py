@@ -2,12 +2,14 @@
 from repro.core.costmodel import Placement, Plan, TimingEstimator  # noqa: F401
 from repro.core.engine import SubLayerEngine  # noqa: F401
 from repro.core.executor import ExecStats, PipelinedExecutor  # noqa: F401
-from repro.core.graphing import ShardDiv, build_graph  # noqa: F401
+from repro.core.graphing import (  # noqa: F401
+    ShardDiv, build_graph, expert_weight_bytes)
 from repro.core.install import run_install  # noqa: F401
 from repro.core.planner import (  # noqa: F401
     PINNED_COMPUTE_KINDS, TIERS, Schedule, ScheduleDiff, build_schedule,
     estimate_tps, estimate_ttft)
 from repro.core.prefetch import PrefetchEngine, PrefetchStats  # noqa: F401
 from repro.core.profile_db import ProfileDB  # noqa: F401
+from repro.core.sublayer import STREAMABLE_KINDS  # noqa: F401
 from repro.core.system import (  # noqa: F401
     CLI1, CLI2, CLI3, SYSTEMS, TPU_V5E, InferenceSetting, SystemConfig)

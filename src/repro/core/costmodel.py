@@ -22,7 +22,7 @@ from dataclasses import dataclass, field
 from typing import List, Optional
 
 from repro.core.profile_db import ProfileDB
-from repro.core.sublayer import SubLayer
+from repro.core.sublayer import STREAMABLE_KINDS, SubLayer
 from repro.core.system import InferenceSetting, SystemConfig
 
 
@@ -51,10 +51,27 @@ class Plan:
         model's execution order by ``build_graph``)."""
         return [p for p in self.placements
                 if p.streamed and p.engine == "gpu"
-                and p.sub.kind in ("attn", "ffn", "moe", "mamba")]
+                and p.sub.kind in STREAMABLE_KINDS]
+
+    def static_stream_order(self) -> List[Placement]:
+        """The pass-static part of ``stream_order``: everything except
+        ``moe_expert`` shards, which are demand-streamed — fetched only
+        when the router selects them, mid-pass (DESIGN.md §9)."""
+        return [p for p in self.stream_order()
+                if p.sub.kind != "moe_expert"]
+
+    def streamed_expert_placements(self) -> List[Placement]:
+        """Cold (streamed) expert shards — the demand-stream candidate set;
+        per pass only the router-selected subset actually crosses the
+        link."""
+        return [p for p in self.stream_order()
+                if p.sub.kind == "moe_expert"]
 
     def streamed_weight_bytes(self) -> int:
-        """Plan-accounted bytes one full pass streams across the link."""
+        """Plan-accounted bytes one full pass streams across the link.
+        For expert-granular plans this is the WORST case (every cold
+        expert demanded); a decode step's actual traffic is
+        ``static_stream_order`` bytes plus the demanded experts only."""
         return sum(p.sub.weight_bytes for p in self.stream_order())
 
 
@@ -92,11 +109,28 @@ class TimingEstimator:
         return sum(self.kernel_time(engine, k, pcie_active) for k in ks)
 
     # ------------------------------------------------------------ plans
-    def _transfer_bytes(self, pl: Placement, plan: Plan, setting) -> float:
+    @staticmethod
+    def demand_probability(sub: SubLayer, new_tokens: int) -> float:
+        """P(a cold expert shard is demanded in a pass of ``new_tokens``)
+        from its routing frequency: per token the expert is selected with
+        probability ~``min(1, top_k * hot)``, so over t independent tokens
+        P(demanded) = 1 - (1 - q)^t. Prefill chunks drive this to ~1 (all
+        experts touched), decode steps to ~top_k/E — exactly the
+        used-bytes-vs-resident-bytes gap demand streaming exploits
+        (DESIGN.md §9)."""
+        m = sub.meta
+        q = min(1.0, m["top_k"] * m.get("hot", 1.0 / m["E"]))
+        return 1.0 - (1.0 - q) ** max(1, new_tokens)
+
+    def _transfer_bytes(self, pl: Placement, plan: Plan, setting,
+                        new_tokens: int = 1) -> float:
         """Per-iteration link traffic caused by this placement."""
         bytes_ = 0.0
         if pl.streamed and pl.engine == "gpu":
-            bytes_ += pl.sub.weight_bytes
+            w = pl.sub.weight_bytes
+            if pl.sub.kind == "moe_expert":
+                w *= self.demand_probability(pl.sub, new_tokens)
+            bytes_ += w
         if pl.sub.kind == "kv":
             # KV in sysram but attention on GPU -> stream cache across link
             attn = self._attn_of(pl, plan)
@@ -125,7 +159,7 @@ class TimingEstimator:
                   setting: InferenceSetting) -> float:
         link_bw = self.sys.link_gbps * 1e9
         # first pass: will the link be busy? (contention decision)
-        total_xfer = sum(self._transfer_bytes(p, plan, setting)
+        total_xfer = sum(self._transfer_bytes(p, plan, setting, new_tokens)
                          for p in plan.placements)
         rough_compute = sum(
             self.sublayer_compute(p.sub, p.engine, new_tokens, setting)
@@ -137,7 +171,7 @@ class TimingEstimator:
         compute_total = {"gpu": 0.0, "cpu": 0.0}
         prev = None
         for p in plan.placements:
-            xfer = self._transfer_bytes(p, plan, setting) \
+            xfer = self._transfer_bytes(p, plan, setting, new_tokens) \
                 + self._boundary_bytes(prev, p, new_tokens)
             link_done += xfer / link_bw
             c = 0.0

@@ -68,6 +68,13 @@ class SubLayerEngine:
         self._ffn_step_jit = jax.jit(self._ffn_step,
                                      static_argnames=("streamed",))
         self.moe_step = jax.jit(self._moe_step)
+        # expert-granular MoE phases (DESIGN.md §9): route-first so the
+        # executor learns the demanded expert set, then one expert-compute
+        # executable shared by the pinned and the streamed phase
+        self.moe_route_step = jax.jit(self._moe_route_step)
+        self.moe_experts_step = jax.jit(self._moe_experts_step)
+        self.moe_combine_step = jax.jit(self._moe_combine_step)
+        self.fold_expert_step = jax.jit(self._fold_expert_step)
         self.embed_step = jax.jit(self._embed_step)
         self.head_step = jax.jit(self._head_step)
 
@@ -154,6 +161,58 @@ class SubLayerEngine:
         h = rmsnorm(x, w["ln2"], cfg.norm_eps)
         h = mlp_mod.moe_ffn(w["moe"], cfg, h, self.policy)
         return x + h
+
+    # ------------------------------------------------ expert-granular moe
+    # The monolithic ``moe_step`` splits into three jitted phases
+    # (DESIGN.md §9) so the executor can demand-stream cold experts:
+    #   route  -> top-k selection + capacity dispatch; the selected expert
+    #             ids go back to the host, which requests ONLY those
+    #             experts from the prefetcher;
+    #   experts-> the (E, C, d) expert einsum against one GROUP's stacked
+    #             weights (absent experts zero-filled). Called once for the
+    #             pinned group — overlapping the cold-expert copies — and
+    #             once for the streamed group. Both calls share one
+    #             executable (same shapes), and each expert slice of the
+    #             batched einsum depends only on its own weights, so the
+    #             group split never changes a demanded expert's bits;
+    #   combine-> jnp.where-merge of the two buffers by pinned membership,
+    #             then the exact gather/gate/scatter of the monolithic
+    #             path.
+    # Every op matches ``moe_ffn`` one for one, so the phased path is
+    # bit-identical to the monolithic sub-layer.
+    def _moe_route_step(self, w, x):
+        """w: {"router", "ln2"}; x: (B, T, d). Returns (disp, aux, idx)."""
+        self.trace_counts["moe_route"] += 1
+        cfg = self.cfg
+        m = cfg.moe
+        B, T, d = x.shape
+        h = rmsnorm(x, w["ln2"], cfg.norm_eps).reshape(B * T, d)
+        gates, idx, _ = mlp_mod._route(h, w["router"], m)
+        cap = mlp_mod.capacity_of(B * T, m)
+        disp, aux = mlp_mod.moe_dispatch(h, gates, idx, m, m.n_experts, 0,
+                                         cap)
+        return disp, aux, idx
+
+    def _moe_experts_step(self, wstack, disp):
+        """wstack: {"w_gate": (E,d,f), ...} with zeros outside the group."""
+        self.trace_counts["moe_experts"] += 1
+        return mlp_mod._expert_compute(disp, wstack, self.cfg)
+
+    def _fold_expert_step(self, stack, tree, e):
+        """Fold ONE expert's acquired weight tree into the (E, ...) group
+        stack — a single dispatch for all weight keys, with the expert id
+        traced so every fold shares one executable."""
+        self.trace_counts["fold_expert"] += 1
+        return {k: stack[k].at[e].set(tree[k]) for k in stack}
+
+    def _moe_combine_step(self, x, buf_pinned, buf_streamed, pinned_mask,
+                          aux):
+        self.trace_counts["moe_combine"] += 1
+        B, T, d = x.shape
+        out_buf = jnp.where(pinned_mask[:, None, None], buf_pinned,
+                            buf_streamed)
+        out = mlp_mod.moe_combine(out_buf, aux, B * T, x.dtype)
+        return x + out.reshape(B, T, d)
 
     def _streamed_mm_ok(self, xshape, p) -> bool:
         if not self.use_streamed_mm:

@@ -53,6 +53,19 @@ class ExecStats:
     # one pass per active slot in the per-slot baseline
     decode_passes: int = 0
     pass_streamed_bytes: list = field(default_factory=list)
+    # expert-granular MoE accounting (DESIGN.md §9): how many expert shards
+    # the routers demanded, how many of those were already pinned (hits),
+    # and the demanded-vs-resident byte split. streamed_bytes ==
+    # plan-static streamed bytes + demanded_expert_bytes, always.
+    expert_demanded: int = 0
+    expert_hits: int = 0
+    demanded_expert_bytes: int = 0
+    resident_expert_bytes: int = 0       # pinned expert bytes right now
+    pass_expert_stats: list = field(default_factory=list)
+
+    @property
+    def expert_hit_rate(self) -> float:
+        return self.expert_hits / max(self.expert_demanded, 1)
     # live re-plan swaps (rebind, DESIGN.md §8): only the pin/evict deltas
     # between the old and new schedules are moved — these fields must match
     # Schedule.diff byte for byte
@@ -96,14 +109,47 @@ class PipelinedExecutor:
         # Schedule.diff stay in exact agreement (DESIGN.md §8)
         self._pinned = {}
         self._pinned_bytes = {}
+        self._pinned_kinds = {}
         for pl in schedule.pinned_placements():
             self._pinned[pl.sub.name] = jax.device_put(self._subtree(pl.sub))
             self._pinned_bytes[pl.sub.name] = pl.sub.weight_bytes
+            self._pinned_kinds[pl.sub.name] = pl.sub.kind
         self._pinned_names = set(self._pinned)
         self.engine = SubLayerEngine(cfg, self.policy) if jit_engine else None
         self.prefetch = PrefetchEngine(self._subtree) if overlap else None
         self._layer_ids = [jnp.asarray(i, jnp.int32)
                            for i in range(cfg.n_layers)]
+        # expert-granular MoE (DESIGN.md §9): the schedule's graph splits
+        # each moe sub-layer into router + per-expert shards; the engine's
+        # phased moe step demand-streams the router-selected cold experts
+        self.expert_granular = schedule.expert_granular
+        assert not self.expert_granular or self.engine is not None, \
+            "expert-granular schedules require the jitted engine " \
+            "(jit_engine=True)"
+        self._stack_cache: dict = {}       # layer -> (stack dict, mask dev)
+        self._zeros_cache: dict = {}       # key -> zeroed (E, ...) template
+        self.expert_ema: dict = {}         # layer -> np (E,) routing freqs
+        self.ema_alpha = 0.25
+        self._refresh_resident_expert_bytes()
+        if self.expert_granular:
+            # warm the fold executable now: its first real use is gated on
+            # an expert being COLD, so without this an ample-budget serve
+            # would hit a fresh compile the moment a rebind evicts its
+            # first expert — mid-serve, violating §8's no-retrace
+            # invariant (expert shapes match across layers, one executable
+            # covers all)
+            keys = self._expert_keys(0)
+            moe = self.layer_params[0]["moe"]
+            self.engine.fold_expert_step(
+                {k: self._expert_zeros(k, moe[k][0]) for k in keys},
+                {k: jnp.zeros(moe[k][0].shape, moe[k][0].dtype)
+                 for k in keys},
+                jnp.asarray(0, jnp.int32))
+
+    def _refresh_resident_expert_bytes(self):
+        self.stats.resident_expert_bytes = sum(
+            self._pinned_bytes[n] for n, k in self._pinned_kinds.items()
+            if k == "moe_expert")
 
     # ------------------------------------------------------------ rebind
     def rebind(self, schedule: Schedule) -> dict:
@@ -129,6 +175,7 @@ class PipelinedExecutor:
         evicted_bytes = 0
         for name in to_evict:
             del self._pinned[name]
+            del self._pinned_kinds[name]
             evicted_bytes += self._pinned_bytes.pop(name)
         pinned_bytes = 0
         staged = []
@@ -138,11 +185,16 @@ class PipelinedExecutor:
             staged.append(tree)
             self._pinned[name] = tree
             self._pinned_bytes[name] = pl.sub.weight_bytes
+            self._pinned_kinds[name] = pl.sub.kind
             pinned_bytes += pl.sub.weight_bytes
         for tree in staged:
             jax.block_until_ready(tree)
         self.schedule = schedule
         self._pinned_names = set(self._pinned)
+        # per-layer pinned-expert weight stacks are views of the pin set:
+        # rebuild them lazily against the new residency (DESIGN.md §9)
+        self._stack_cache.clear()
+        self._refresh_resident_expert_bytes()
         dt = time.perf_counter() - t0
         self.stats.rebinds += 1
         self.stats.rebind_pinned_bytes += pinned_bytes
@@ -153,6 +205,10 @@ class PipelinedExecutor:
                 "evicted_bytes": evicted_bytes, "seconds": dt}
 
     # ------------------------------------------------------------ weights
+    # weight-matrix keys of one expert's stack (+ scales when int8-quantised)
+    _EXPERT_KEYS = ("w_gate", "w_up", "w_down")
+    _SCALE_KEYS = ("s_gate", "s_up", "s_down")
+
     def _subtree(self, sub):
         lp = self.layer_params[sub.layer]
         if sub.kind == "attn":
@@ -160,6 +216,14 @@ class PipelinedExecutor:
         if sub.kind in ("ffn", "moe"):
             key = "moe" if "moe" in lp else "ffn"
             return {key: lp[key], "ln2": lp["ln2"]}
+        if sub.kind == "moe_router":
+            return {"router": lp["moe"]["router"], "ln2": lp["ln2"]}
+        if sub.kind == "moe_expert":
+            e = sub.meta["expert"]
+            moe = lp["moe"]
+            keys = [k for k in self._EXPERT_KEYS + self._SCALE_KEYS
+                    if k in moe]
+            return {k: moe[k][e] for k in keys}
         raise ValueError(sub.kind)
 
     def _fetch_sync(self, placement):
@@ -233,6 +297,142 @@ class PipelinedExecutor:
             h = mlp_mod.ffn(w["ffn"], cfg, h, self.policy)
         return x + h
 
+    # ------------------------------------------------ expert-granular moe
+    def _expert_zeros(self, key, spec):
+        """Cached zero-filled (E, ...) stack template for one weight key;
+        absent experts contribute zero rows the combine never gathers."""
+        cache_key = (key, spec.shape, str(spec.dtype))
+        z = self._zeros_cache.get(cache_key)
+        if z is None:
+            z = jnp.zeros((self.cfg.moe.n_experts,) + spec.shape, spec.dtype)
+            self._zeros_cache[cache_key] = z
+        return z
+
+    def _expert_keys(self, layer):
+        moe = self.layer_params[layer]["moe"]
+        return [k for k in self._EXPERT_KEYS + self._SCALE_KEYS if k in moe]
+
+    def _pinned_expert_stack(self, layer):
+        """(stacked weights, membership mask) of the experts currently
+        pinned for ``layer``. Cached between rebinds — the pinned group is
+        static while the schedule is, so the hot-expert phase never pays a
+        host->device copy (DESIGN.md §9).
+
+        Single-device simulation concession: the group stacks are
+        full-(E, ...) zero-padded buffers so both expert phases share one
+        shape-stable executable — on this container "device" and "host"
+        are the same memory, so the zero padding costs address space, not
+        the VRAM the planner budgets. The paper-fidelity surfaces are the
+        plan's per-expert pin accounting and the HOST->DEVICE transfer
+        counters, which stay expert-granular; a real deployment would back
+        this with a paged per-expert buffer instead."""
+        cached = self._stack_cache.get(layer)
+        if cached is not None:
+            return cached
+        E = self.cfg.moe.n_experts
+        moe = self.layer_params[layer]["moe"]
+        keys = self._expert_keys(layer)
+        stack = {k: self._expert_zeros(k, moe[k][0]) for k in keys}
+        mask = np.zeros((E,), bool)
+        for e in range(E):
+            tree = self._pinned.get(f"L{layer}/moe.expert{e}")
+            if tree is None:
+                continue
+            mask[e] = True
+            for k in keys:
+                stack[k] = stack[k].at[e].set(tree[k])
+        cached = (stack, jnp.asarray(mask))
+        self._stack_cache[layer] = cached
+        return cached
+
+    def _record_routing(self, layer, idx_host):
+        """EMA of router selection frequencies — the online refinement of
+        the profile-DB routing stats the planner pins hot experts from
+        (DESIGN.md §9)."""
+        E = self.cfg.moe.n_experts
+        counts = np.bincount(idx_host.reshape(-1),
+                             minlength=E).astype(np.float64)
+        freq = counts / max(counts.sum(), 1.0)
+        prev = self.expert_ema.get(layer)
+        self.expert_ema[layer] = freq if prev is None else \
+            (1 - self.ema_alpha) * prev + self.ema_alpha * freq
+
+    def _moe_sub_granular(self, layer, x, by_name, streaming):
+        """One expert-granular MoE sub-layer (DESIGN.md §9):
+
+        route first (router is priority-pinned, so this never waits on the
+        link), sync the selected expert ids to the host, and request ONLY
+        the demanded cold experts from the prefetcher's demand pool; the
+        pinned-expert phase computes while those copies are in flight;
+        the streamed-expert phase folds each demanded shard into a
+        zero-filled stack as it lands (the fold copies the data, so the
+        scratch slot frees immediately); a where-merge by pinned
+        membership then reproduces the monolithic path's expert buffer
+        bit for bit.
+        """
+        eng = self.engine
+        r_pl = by_name[f"L{layer}/moe.router"]
+        w_r, rel_r = self._weights_for(r_pl, streaming)
+        self.stats.engine_calls[r_pl.engine] += 1
+        disp, aux, idx = eng.moe_route_step(w_r, x)
+        if rel_r:
+            self.prefetch.release(r_pl.sub.name)
+        idx_host = np.asarray(idx)          # host sync: the demanded set
+        self._record_routing(layer, idx_host)
+        demanded = np.unique(idx_host)
+        cold = []
+        for e in demanded:
+            name = f"L{layer}/moe.expert{int(e)}"
+            if name in self._pinned_names:
+                self.stats.expert_hits += 1
+            else:
+                cold.append(by_name[name])
+        self.stats.expert_demanded += len(demanded)
+        # request the demanded cold experts BEFORE the pinned phase so
+        # their copies hide under the resident experts' compute
+        streamed_cold = [pl for pl in cold if self._demand_active
+                         and pl.streamed and pl.engine == "gpu"]
+        if streamed_cold:
+            self.prefetch.request(streamed_cold)
+        stack_pinned, mask = self._pinned_expert_stack(layer)
+        buf_p = eng.moe_experts_step(stack_pinned, disp)
+        if cold:
+            keys = self._expert_keys(layer)
+            moe = self.layer_params[layer]["moe"]
+            stream_stack = {k: self._expert_zeros(k, moe[k][0])
+                            for k in keys}
+            requested = {pl.sub.name for pl in streamed_cold}
+            for pl in cold:
+                name = pl.sub.name
+                self.stats.engine_calls[pl.engine] += 1
+                if name in requested:
+                    tree = self.prefetch.acquire(name)
+                    self.stats.streamed_bytes += pl.sub.weight_bytes
+                    self.stats.demanded_expert_bytes += pl.sub.weight_bytes
+                    rel = True
+                else:
+                    # at-use transfer (overlap disabled, or a CPU-engine
+                    # placement); _fetch_sync accounts streamed/at-use
+                    tree = self._fetch_sync(pl)
+                    rel = False
+                    if pl.streamed and pl.engine == "gpu":
+                        self.stats.demanded_expert_bytes += \
+                            pl.sub.weight_bytes
+                # fold-then-release: the fold copies the shard into the
+                # group stack, so the scratch slot frees before the next
+                # acquire even under a single demand slot
+                stream_stack = eng.fold_expert_step(
+                    stream_stack, tree,
+                    jnp.asarray(pl.sub.meta["expert"], jnp.int32))
+                if rel:
+                    self.prefetch.release(name)
+            buf_s = eng.moe_experts_step(stream_stack, disp)
+        else:
+            # nothing demanded was cold: the streamed buffer is never
+            # selected by the mask, reuse the pinned one
+            buf_s = buf_p
+        return eng.moe_combine_step(x, buf_p, buf_s, mask, aux)
+
     # ------------------------------------------------------------ passes
     def _begin_pass(self, tier: int):
         """Start one pass at ``tier``: begin the prefetch session over the
@@ -247,16 +447,26 @@ class PipelinedExecutor:
         # per-tier pin budgets can differ, so a sub-layer this executor
         # pinned (canonical min-tier set) may be marked streamed in the
         # picked tier's plan; it must not enter the prefetch queue or its
-        # scratch slot would never be released
-        order = [p for p in plan.stream_order()
-                 if p.sub.name not in self._pinned_names] \
-            if self.prefetch is not None else []
+        # scratch slot would never be released. Expert shards never enter
+        # the static queue either: they are demand-streamed — requested
+        # mid-pass once each layer's router has selected them
+        # (DESIGN.md §9).
+        order, demand_bytes = [], 0
+        self._demand_active = False
+        if self.prefetch is not None:
+            order = [p for p in plan.static_stream_order()
+                     if p.sub.name not in self._pinned_names]
+            demand_bytes = max(
+                (p.sub.weight_bytes for p in plan.streamed_expert_placements()
+                 if p.sub.name not in self._pinned_names), default=0)
         streaming = {p.sub.name for p in order}
-        if order:
+        started = bool(order) or demand_bytes > 0
+        if started:
             self.prefetch.start(
                 order, avail_bytes=max(entry.scratch_bytes - entry.act_bytes,
-                                       0))
-        return by_name, streaming, bool(order)
+                                       0), demand_bytes=demand_bytes)
+            self._demand_active = demand_bytes > 0
+        return by_name, streaming, started
 
     def _end_pass(self, started: bool):
         if started:
@@ -281,6 +491,13 @@ class PipelinedExecutor:
             x, k, v = attn_fn(w, x, k, v, i)
             if rel:
                 self.prefetch.release(pa.sub.name)
+            if self.expert_granular:
+                pf = by_name[f"L{i}/moe.router"]
+                if prev_engine != pf.engine:
+                    self.stats.boundary_hops += 1
+                prev_engine = pf.engine
+                x = self._moe_sub_granular(i, x, by_name, streaming)
+                continue
             pkey = f"L{i}/moe" if cfg.moe is not None else f"L{i}/ffn"
             pf = by_name[pkey]
             w, rel = self._weights_for(pf, streaming)
@@ -343,6 +560,9 @@ class PipelinedExecutor:
         by_name, streaming, started = self._begin_pass(
             self.schedule.pick_decode_tier(n_active))
         streamed_before = self.stats.streamed_bytes
+        demanded_before = (self.stats.expert_demanded,
+                           self.stats.expert_hits,
+                           self.stats.demanded_expert_bytes)
         try:
             x = self.engine.embed_step(self._embed_dev, tokens)
             k, v = kv["k"], kv["v"]
@@ -357,6 +577,17 @@ class PipelinedExecutor:
         self.stats.decode_passes += 1
         self.stats.pass_streamed_bytes.append(
             self.stats.streamed_bytes - streamed_before)
+        if self.expert_granular:
+            d0, h0, b0 = demanded_before
+            demanded = self.stats.expert_demanded - d0
+            self.stats.pass_expert_stats.append({
+                "demanded": demanded,
+                "hits": self.stats.expert_hits - h0,
+                "demanded_bytes": self.stats.demanded_expert_bytes - b0,
+                "resident_bytes": self.stats.resident_expert_bytes,
+                "hit_rate": (self.stats.expert_hits - h0)
+                / max(demanded, 1),
+            })
         return logits, {"k": k, "v": v}
 
     def init_kv(self, batch):

@@ -3,11 +3,18 @@
 ``shard_div`` divides weight/KV sizes for pod-scale use: when the model is
 already TP/EP-sharded across a mesh, the planner sees the per-chip slice
 (client mode: div=1 everywhere).
+
+``expert_granular=True`` splits every MoE FFN below the sub-layer level
+(DESIGN.md §9): a ``L{i}/moe.router`` shard (fp32 router weights, pinned
+with attention priority) plus ``n_experts`` individually placeable
+``L{i}/moe.expert{e}`` shards. ``routing`` seeds each expert's selection
+frequency (``meta["hot"]``) from profile-DB routing stats so the planner
+pins the hot set first; absent stats default to uniform ``1/E``.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List
+from typing import Dict, List, Optional, Sequence
 
 from repro.config import ModelConfig
 from repro.core.sublayer import SubLayer
@@ -21,8 +28,23 @@ class ShardDiv:
     out: int = 1
 
 
+def expert_weight_bytes(cfg: ModelConfig, wdtype) -> int:
+    """Bytes of ONE expert's weight stack as the executor actually moves
+    it. ``expert_quant == "int8"`` stores the three (d, f) matrices int8
+    plus three (1, 1) fp32 scales (models/mlp.py), so the per-expert
+    transfer is ``3*d*f + 12`` bytes — NOT the bf16 ``3*d*f*2`` the seed
+    accounting assumed."""
+    m = cfg.moe
+    if cfg.expert_quant == "int8":
+        return 3 * cfg.d_model * m.d_expert + 3 * 4
+    return int(3 * cfg.d_model * m.d_expert * wdtype)
+
+
 def build_graph(cfg: ModelConfig, wdtype: int = 2,
-                div: ShardDiv = ShardDiv()) -> List[SubLayer]:
+                div: ShardDiv = ShardDiv(), *,
+                expert_granular: bool = False,
+                routing: Optional[Dict[int, Sequence[float]]] = None,
+                ) -> List[SubLayer]:
     d, hd = cfg.d_model, cfg.resolved_head_dim
     H, KV = cfg.n_heads, cfg.n_kv_heads
     subs: List[SubLayer] = []
@@ -44,11 +66,30 @@ def build_graph(cfg: ModelConfig, wdtype: int = 2,
                                  kv_bytes_per_token=kv_per_tok))
             if cfg.moe is not None:
                 m = cfg.moe
-                w = m.n_experts * 3 * d * m.d_expert * wdtype // div.ffn
-                subs.append(SubLayer(f"L{layer}/moe", "moe", layer, w,
-                                     meta={"d": d, "f": m.d_expert,
-                                           "E": m.n_experts, "top_k": m.top_k,
-                                           "wdtype": wdtype}))
+                e_w = expert_weight_bytes(cfg, wdtype) // div.ffn
+                e_wdt = 1 if cfg.expert_quant == "int8" else wdtype
+                if expert_granular:
+                    freqs = (routing or {}).get(layer)
+                    subs.append(SubLayer(
+                        f"L{layer}/moe.router", "moe_router", layer,
+                        d * m.n_experts * 4,
+                        meta={"d": d, "E": m.n_experts, "top_k": m.top_k,
+                              "wdtype": wdtype}))
+                    for e in range(m.n_experts):
+                        hot = (float(freqs[e]) if freqs is not None
+                               else 1.0 / m.n_experts)
+                        subs.append(SubLayer(
+                            f"L{layer}/moe.expert{e}", "moe_expert", layer,
+                            e_w,
+                            meta={"d": d, "f": m.d_expert, "E": m.n_experts,
+                                  "top_k": m.top_k, "expert": e, "hot": hot,
+                                  "wdtype": e_wdt}))
+                else:
+                    subs.append(SubLayer(
+                        f"L{layer}/moe", "moe", layer, m.n_experts * e_w,
+                        meta={"d": d, "f": m.d_expert,
+                              "E": m.n_experts, "top_k": m.top_k,
+                              "wdtype": e_wdt}))
             else:
                 n_mat = 3 if cfg.mlp == "swiglu" else 2
                 w = n_mat * d * cfg.d_ff * wdtype // div.ffn

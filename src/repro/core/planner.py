@@ -20,7 +20,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.costmodel import Placement, Plan, TimingEstimator
-from repro.core.sublayer import SubLayer
+from repro.core.sublayer import STREAMABLE_KINDS, SubLayer
 from repro.core.system import InferenceSetting, SystemConfig
 
 TIERS = (1, 4, 16, 32, 64, 512, 1024, 2048, 4096, 8192, 16384)
@@ -30,8 +30,11 @@ TIERS = (1, 4, 16, 32, 64, 512, 1024, 2048, 4096, 8192, 16384)
 # kv residency is tracked by the plans but the cache arrays live with the
 # executor/batcher, not the pin store). Schedule.diff and
 # PipelinedExecutor.rebind MUST agree on this set, byte for byte
-# (DESIGN.md §8).
-PINNED_COMPUTE_KINDS = ("attn", "ffn", "moe", "mamba")
+# (DESIGN.md §8). Expert-granular MoE graphs (DESIGN.md §9) pin the router
+# shard and individual expert shards, so a live re-plan moves single
+# experts instead of whole FFNs.
+PINNED_COMPUTE_KINDS = ("attn", "ffn", "moe", "mamba", "moe_router",
+                        "moe_expert")
 
 
 @dataclass
@@ -130,6 +133,13 @@ class Schedule:
         """name -> weight bytes for the canonical pinned set."""
         return {p.sub.name: p.sub.weight_bytes for p in self.pinned_placements()}
 
+    @property
+    def expert_granular(self) -> bool:
+        """True when the underlying graph splits MoE FFNs into router +
+        per-expert shards (DESIGN.md §9)."""
+        plan = self.tiers[min(self.tiers)].plan
+        return any(p.sub.kind == "moe_router" for p in plan.placements)
+
     def diff(self, new: "Schedule") -> ScheduleDiff:
         """Pin/evict/stream deltas required to go from ``self`` to ``new``.
 
@@ -182,20 +192,32 @@ def decide_scratch_budget(budget: int, subs: List[SubLayer],
 
         scratch = 2 * max_w + ACT_BUFFERS * tokens * d * act_bytes
 
-    where ``2 * max_w`` is the double-buffer holding the largest streamable
-    sub-layer's weights (slot i computes while slot i+1 copies),
+    where ``2 * max_w`` is the double-buffer holding the largest
+    *streamable* shard's weights (slot i computes while slot i+1 copies),
     ``tokens = max(tier, batch)`` is the activation row count actually in
     flight (a tier-sized prefill chunk, or one token per sequence at
     decode — whichever is larger), ``d`` the widest model dim, and
     ``act_bytes`` the activation dtype width from the inference setting.
+    Only shards the executor can actually stream (``STREAMABLE_KINDS``)
+    size the buffer — embed/output heads never enter the scratch, and an
+    expert-granular MoE graph's unit is a single expert, not the whole
+    FFN, so tight budgets that lost the double-buffer against a monolithic
+    ``moe`` sub-layer regain the overlap after the split (DESIGN.md §9).
     The full double-buffer is granted whenever it fits the budget (pinning
     gets the remainder — the overlap mechanism outranks extra pins); only
     when it cannot fit does the single-buffer fallback keep at least half
     the budget pinnable.
     """
-    max_w = max((s.weight_bytes for s in subs), default=0)
+    max_w = max((s.weight_bytes for s in subs
+                 if s.kind in STREAMABLE_KINDS), default=0)
+    # expert-granular graphs reserve one extra demand slot: demanded cold
+    # experts stage through their own pool so they never queue behind the
+    # static look-ahead (DESIGN.md §9) — that pool's shard must fit the
+    # scratch too, or the prefetcher would over-commit the reservation
+    demand_w = max((s.weight_bytes for s in subs
+                    if s.kind == "moe_expert"), default=0)
     act = activation_bytes(subs, setting, tier)
-    want = 2 * max_w + act
+    want = 2 * max_w + demand_w + act
     if want <= budget:
         # grant the full double-buffer; pinning gets the remainder (at real
         # model scales `want` is far below half the budget anyway)
@@ -207,8 +229,15 @@ def decide_scratch_budget(budget: int, subs: List[SubLayer],
 
 def pin_by_priority(pinned_budget: int, subs: List[SubLayer],
                     setting: InferenceSetting):
-    """Fit as many sub-layers as possible, priority order (stable by layer)."""
-    order = sorted(subs, key=lambda s: (s.priority, s.layer))
+    """Fit as many sub-layers as possible, priority order (stable by layer).
+
+    Within a priority class, shards with a higher routing frequency
+    (``meta["hot"]``, expert shards) pin first — the hot-set selection of
+    DESIGN.md §9. Non-expert sub-layers carry no ``hot`` key, so their
+    relative order is untouched (the sort is stable)."""
+    order = sorted(subs,
+                   key=lambda s: (s.priority, -s.meta.get("hot", 0.0),
+                                  s.layer))
     pinned, remaining = set(), []
     used = 0
     for s in order:

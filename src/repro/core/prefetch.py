@@ -6,9 +6,9 @@ simulated it — each streamed sub-layer's weights were transferred
 synchronously at point-of-use, serialising copy and compute. This engine
 makes the overlap real:
 
-- a background transfer thread walks the plan's ``stream_order`` (streamed
-  placements in execution order) and stages each sub-layer's weights into
-  one of two scratch slots via ``jax.device_put``;
+- a background transfer thread walks the plan's ``static_stream_order``
+  (streamed placements in execution order) and stages each sub-layer's
+  weights into one of two scratch slots via ``jax.device_put``;
 - slot occupancy is bounded by a semaphore sized from the schedule's
   ``scratch_bytes`` (2 slots when the budget fits a double-buffer of the
   largest streamed sub-layer, else 1 — which degrades to the synchronous
@@ -21,14 +21,26 @@ makes the overlap real:
   dispatched, freeing the slot so the thread can stage sub-layer i+1 while
   sub-layer i computes.
 
+Demand streaming (DESIGN.md §9): expert-granular MoE plans cannot enqueue
+their cold expert shards up front — which experts a pass needs is only
+known after each layer's router runs. A session opened with
+``demand_bytes > 0`` therefore runs a SECOND transfer worker over a
+dynamic queue fed by ``request()`` mid-pass, with its own slot pool.
+Keeping the pools separate is what makes demand fetches deadlock-free:
+the static worker may already hold both static slots staging layers
+*ahead* of the consumer, and a demanded expert must never have to wait
+for those slots (the consumer won't release them before it gets the
+expert).
+
 One session (``start``/``finish``) corresponds to one pass over a chunk's
-plan; sessions are cheap (a daemon thread each) and keep the queue exactly
-in step with the executor's consumption order.
+plan; sessions are cheap (daemon threads) and keep the queues exactly in
+step with the executor's consumption order.
 """
 from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass
 from typing import Callable, List, Optional
 
@@ -42,32 +54,40 @@ class PrefetchStats:
     staged_bytes: int = 0        # actual bytes moved host->device
     staged_sublayers: int = 0
     slots: int = 0               # realised double-buffer depth (0: no session)
+    demand_slots: int = 0        # realised demand-pool depth (expert shards)
+    demanded_sublayers: int = 0  # shards staged through the demand queue
 
 
 class _Staged:
-    __slots__ = ("event", "tree", "copy_s", "error")
+    __slots__ = ("event", "tree", "copy_s", "error", "pool")
 
-    def __init__(self):
+    def __init__(self, pool: str = "static"):
         self.event = threading.Event()
         self.tree = None
         self.copy_s = 0.0
         self.error: Optional[BaseException] = None
+        self.pool = pool
 
 
 class PrefetchEngine:
-    """Background-thread transfer queue over a plan's streamed placements.
+    """Background-thread transfer queues over a plan's streamed placements.
 
     ``fetch_host(sub)`` returns the host-resident weight tree of a
     sub-layer; the engine moves it to device with ``jax.device_put`` and
-    hands the device tree to ``acquire`` in FIFO order.
+    hands the device tree to ``acquire`` — in FIFO order per pool.
     """
 
     def __init__(self, fetch_host: Callable):
         self._fetch_host = fetch_host
         self.stats = PrefetchStats()
         self._thread: Optional[threading.Thread] = None
+        self._demand_thread: Optional[threading.Thread] = None
         self._staged: dict = {}
         self._sem: Optional[threading.Semaphore] = None
+        self._demand_sem: Optional[threading.Semaphore] = None
+        self._demand_q: deque = deque()
+        self._demand_cv = threading.Condition()
+        self._closed = True
 
     @property
     def active(self) -> bool:
@@ -76,7 +96,7 @@ class PrefetchEngine:
         to finish: sessions size their scratch slots from the *bound*
         schedule's tier entry, so a swap mid-session would leave staged
         slots sized for the old scratch budget."""
-        return self._thread is not None
+        return self._thread is not None or self._demand_thread is not None
 
     # ------------------------------------------------------------ session
     @staticmethod
@@ -89,43 +109,102 @@ class PrefetchEngine:
         max_w = max((p.sub.weight_bytes for p in order), default=0)
         return 2 if avail_bytes >= 2 * max_w else 1
 
-    def start(self, order: List, avail_bytes: Optional[int] = None):
+    def start(self, order: List, avail_bytes: Optional[int] = None,
+              demand_bytes: int = 0):
         """Begin staging ``order`` (Placement list) one sub-layer ahead.
 
         Every item of ``order`` MUST be acquire()d and release()d by the
         consumer in this exact sequence (or the session finish()ed early) —
         a skipped item would hold its scratch slot for the whole pass.
+
+        ``demand_bytes > 0`` additionally opens the session for mid-pass
+        ``request()`` calls (demand-streamed expert shards, DESIGN.md §9);
+        the value is the largest shard a request may carry, used to size
+        the demand slot pool.
         """
-        assert self._thread is None, "prefetch session already active"
-        if not order:
+        assert not self.active, "prefetch session already active"
+        if not order and demand_bytes <= 0:
             return
         names = [p.sub.name for p in order]
         assert len(set(names)) == len(names), "duplicate sub-layer in order"
         self.stats.slots = self.slots_for(order, avail_bytes)
         self._sem = threading.Semaphore(self.stats.slots)
         self._staged = {n: _Staged() for n in names}
-        self._thread = threading.Thread(
-            target=self._worker, args=(list(order),), daemon=True)
-        self._thread.start()
+        self._closed = False
+        if demand_bytes > 0:
+            # the demand pool sizes from what the STATIC slots leave of the
+            # scratch allowance (the planner reserves one demand shard on
+            # top of the double-buffer, DESIGN.md §9); the floor of one
+            # slot mirrors the static pool's single-slot degradation
+            if avail_bytes is None:
+                self.stats.demand_slots = 2
+            else:
+                max_static = max((p.sub.weight_bytes for p in order),
+                                 default=0)
+                remaining = avail_bytes - self.stats.slots * max_static
+                self.stats.demand_slots = \
+                    2 if remaining >= 2 * demand_bytes else 1
+            self._demand_sem = threading.Semaphore(self.stats.demand_slots)
+            self._demand_q = deque()
+            self._demand_thread = threading.Thread(
+                target=self._demand_worker, daemon=True)
+            self._demand_thread.start()
+        else:
+            self.stats.demand_slots = 0
+        if order:
+            self._thread = threading.Thread(
+                target=self._worker, args=(list(order),), daemon=True)
+            self._thread.start()
+
+    def _stage_one(self, pl, st: _Staged):
+        try:
+            t0 = time.perf_counter()
+            host = self._fetch_host(pl.sub)
+            dev = jax.device_put(host)
+            jax.block_until_ready(dev)
+            st.copy_s = time.perf_counter() - t0
+            st.tree = dev
+            self.stats.staged_bytes += sum(
+                x.size * x.dtype.itemsize for x in jax.tree.leaves(host))
+            self.stats.staged_sublayers += 1
+        except BaseException as e:  # surfaced on acquire
+            st.error = e
+        finally:
+            st.event.set()
 
     def _worker(self, order):
         for pl in order:
             self._sem.acquire()
-            st = self._staged[pl.sub.name]
-            try:
-                t0 = time.perf_counter()
-                host = self._fetch_host(pl.sub)
-                dev = jax.device_put(host)
-                jax.block_until_ready(dev)
-                st.copy_s = time.perf_counter() - t0
-                st.tree = dev
-                self.stats.staged_bytes += sum(
-                    x.size * x.dtype.itemsize for x in jax.tree.leaves(host))
-                self.stats.staged_sublayers += 1
-            except BaseException as e:  # surfaced on acquire
-                st.error = e
-            finally:
-                st.event.set()
+            self._stage_one(pl, self._staged[pl.sub.name])
+
+    def _demand_worker(self):
+        while True:
+            with self._demand_cv:
+                while not self._demand_q and not self._closed:
+                    self._demand_cv.wait()
+                if not self._demand_q and self._closed:
+                    return
+                pl = self._demand_q.popleft()
+            self._demand_sem.acquire()
+            self.stats.demanded_sublayers += 1
+            self._stage_one(pl, self._staged[pl.sub.name])
+
+    # ------------------------------------------------------------ demand
+    def request(self, placements: List):
+        """Enqueue demand-streamed shards mid-pass (router-selected cold
+        experts). The caller must acquire()/release() each requested shard
+        before the pass finishes. Only valid on sessions started with
+        ``demand_bytes > 0``."""
+        assert self._demand_thread is not None, \
+            "request() on a session without a demand pool"
+        with self._demand_cv:
+            for pl in placements:
+                name = pl.sub.name
+                assert name not in self._staged, \
+                    f"{name} already staged/requested this pass"
+                self._staged[name] = _Staged(pool="demand")
+                self._demand_q.append(pl)
+            self._demand_cv.notify()
 
     # ------------------------------------------------------------ consume
     def acquire(self, name: str):
@@ -145,15 +224,23 @@ class PrefetchEngine:
         """Free ``name``'s scratch slot (compute for it has been issued)."""
         st = self._staged.pop(name)
         st.tree = None
-        self._sem.release()
+        (self._demand_sem if st.pool == "demand" else self._sem).release()
 
     def finish(self):
-        """End the session; joins the transfer thread."""
+        """End the session; joins the transfer threads."""
+        if not self.active:
+            return
+        with self._demand_cv:
+            self._closed = True
+            self._demand_cv.notify()
+        # unconsumed slots (error paths) must not deadlock the workers
+        while self._staged:
+            name = next(iter(self._staged))
+            self._staged[name].event.wait()
+            self.release(name)
         if self._thread is not None:
-            # unconsumed slots (error paths) must not deadlock the worker
-            while self._staged:
-                name = next(iter(self._staged))
-                self._staged[name].event.wait()
-                self.release(name)
             self._thread.join()
             self._thread = None
+        if self._demand_thread is not None:
+            self._demand_thread.join()
+            self._demand_thread = None

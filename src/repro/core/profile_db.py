@@ -75,6 +75,23 @@ class ProfileDB:
                        for i in range(n))
         return min(ranked, key=dist), "partial"
 
+    # ---------------------------------------------------------- routing
+    # Per-model MoE routing statistics (DESIGN.md §9): for each layer, the
+    # fraction of router assignments landing on each expert. Seeded at
+    # install/first-serve time, refined online by the executor's EMA of
+    # router selections, and read back by the planner to pick the hot set.
+    # Schema inside ``meta`` (so it rides the existing JSON save/load):
+    #   meta["routing"][model_name][str(layer)] = [freq_e for e in range(E)]
+    def get_routing(self, model: str):
+        """{layer: [freq per expert]} for ``model`` — empty when unseeded
+        (callers default to uniform 1/E)."""
+        stored = self.meta.get("routing", {}).get(model, {})
+        return {int(layer): list(freqs) for layer, freqs in stored.items()}
+
+    def set_routing(self, model: str, layer: int, freqs):
+        self.meta.setdefault("routing", {}).setdefault(model, {})[
+            str(layer)] = [float(f) for f in freqs]
+
     # ---------------------------------------------------------- io
     def save(self, path: str):
         blob = {

@@ -333,4 +333,11 @@ class ContinuousBatcher:
             # live re-plans applied under this batcher (DESIGN.md §8)
             "rebudgets": len(self.rebudget_log),
             "rebind_s": self.ex.stats.rebind_s,
+            # expert-granular MoE serving (DESIGN.md §9): how often the
+            # routers hit the pinned hot set, and demanded-vs-resident
+            # expert bytes per decode iteration
+            "expert_hit_rate": self.ex.stats.expert_hit_rate,
+            "expert_demanded": self.ex.stats.expert_demanded,
+            "demanded_expert_bytes": self.ex.stats.demanded_expert_bytes,
+            "resident_expert_bytes": self.ex.stats.resident_expert_bytes,
         }

@@ -7,6 +7,12 @@ given (new_tokens, context) point, which is what the profile-driven cost
 model consumes.
 
 Priority order for VRAM pinning (paper §4): attn > kv > ffn > outs.
+
+Below the sub-layer level, an MoE FFN decomposes into addressable shards
+(DESIGN.md §9): one ``moe_router`` shard (tiny, priority-pinned with the
+attention weights so routing never waits on the link) and ``n_experts``
+``moe_expert`` shards that the planner places *individually* — hot experts
+pinned, cold ones demand-streamed per decode step.
 """
 from __future__ import annotations
 
@@ -14,7 +20,15 @@ from dataclasses import dataclass, field
 from typing import List, Tuple
 
 PRIORITY = {"attn": 0, "kv": 1, "mamba": 2, "ffn": 2, "moe": 2, "out": 3,
-            "embed": 3, "vision": 1}
+            "embed": 3, "vision": 1, "moe_router": 0, "moe_expert": 2}
+
+# Kinds the executor can stream into the VRAM scratch (weights copied
+# just-in-time). Everything else is either resident-by-construction (embed,
+# out, vision at smoke scale) or has no weights (kv). The prefetch
+# double-buffer is sized from the largest sub-layer of THESE kinds — after
+# the expert split the unit shrinks from a whole MoE FFN to one expert.
+STREAMABLE_KINDS = ("attn", "ffn", "moe", "mamba", "moe_router",
+                    "moe_expert")
 
 
 @dataclass(frozen=True)
@@ -89,6 +103,23 @@ class SubLayer:
                        min(E, t * k) * 3 * d * f * wb + t * k * (d + f) * 2,
                        wdt),
                 Kernel("elementwise", (t, f), 6.0 * t * f, 4.0 * t * f),
+            ]
+        if self.kind == "moe_router":
+            d, E = m["d"], m["E"]
+            # same router cost the monolithic moe sub-layer charges
+            return [Kernel("moe_route", (t, E), 2.0 * t * E * d / d + 5.0 * t * E,
+                           t * d * 2 + d * E * 4)]
+        if self.kind == "moe_expert":
+            d, f, E, k = m["d"], m["f"], m["E"], m["top_k"]
+            # expected token share of THIS expert from its routing frequency
+            # (uniform 1/E when no stats are seeded; DESIGN.md §9)
+            hot = m.get("hot", 1.0 / E)
+            tok = max(1.0, t * k * hot)
+            return [
+                Kernel("matmul", (int(tok), f, d), 2.0 * tok * f * d * 3,
+                       3 * d * f * wb + tok * (d + f) * 2, wdt),
+                Kernel("elementwise", (int(tok), f), 6.0 * tok * f,
+                       4.0 * tok * f),
             ]
         if self.kind == "mamba":
             d, di, n, h = m["d"], m["di"], m["n"], m["h"]

@@ -115,14 +115,15 @@ def _expert_compute(disp, params, cfg, expert_slice=None):
     return jnp.einsum("ecf,efd->ecd", h, wd)
 
 
-def _moe_local(x, params, cfg, n_local, local_offset, capacity):
-    """Core MoE over a local token set against experts [offset, offset+n_local).
-
-    x: (T, d). Returns (T, d) partial output covering only local experts.
-    """
-    m = cfg.moe
+def moe_dispatch(x, gates, idx, m, n_local, local_offset, capacity):
+    """Masked-capacity dispatch: scatter each kept (token, choice) into its
+    expert's capacity buffer. Returns ``(disp, aux)`` where ``disp`` is the
+    (n_local, capacity, d) expert input buffer and ``aux`` the scatter
+    coordinates ``(safe_idx, safe_pos, keep, flat_gate, token_of)`` that
+    ``moe_combine`` gathers back through. Shared verbatim by the monolithic
+    ``moe_ffn`` path and the expert-granular engine phases (DESIGN.md §9),
+    so both run the exact same capacity math."""
     T, d = x.shape
-    gates, idx, _ = _route(x, params["router"], m)
     A = T * m.top_k
     flat_idx = idx.reshape(A) - local_offset          # local expert ids
     flat_gate = gates.reshape(A)
@@ -136,16 +137,36 @@ def _moe_local(x, params, cfg, n_local, local_offset, capacity):
     xa = x[token_of] * keep[:, None].astype(x.dtype)
     disp = jnp.zeros((n_local, capacity, d), x.dtype)
     disp = disp.at[safe_idx, safe_pos].add(xa, mode="drop")
+    return disp, (safe_idx, safe_pos, keep, flat_gate, token_of)
+
+
+def moe_combine(out_buf, aux, n_tokens, dtype):
+    """Gather expert outputs back to token order, gate-weight and sum the
+    top-k contributions per token. Inverse of ``moe_dispatch``."""
+    safe_idx, safe_pos, keep, flat_gate, token_of = aux
+    d = out_buf.shape[-1]
+    gathered = out_buf[safe_idx, safe_pos]            # (A, d)
+    gathered = gathered * (flat_gate * keep.astype(jnp.float32)).astype(dtype)[:, None]
+    return jnp.zeros((n_tokens, d), dtype).at[token_of].add(gathered)
+
+
+def _moe_local(x, params, cfg, n_local, local_offset, capacity):
+    """Core MoE over a local token set against experts [offset, offset+n_local).
+
+    x: (T, d). Returns (T, d) partial output covering only local experts.
+    """
+    m = cfg.moe
+    T, d = x.shape
+    gates, idx, _ = _route(x, params["router"], m)
+    disp, aux = moe_dispatch(x, gates, idx, m, n_local, local_offset,
+                             capacity)
     # Slice expert weights only when they are still global-shaped (the EP
     # shard_map path already hands us local (E_loc, d, f) shards).
     slice_needed = params["w_gate"].shape[0] != n_local
     out_buf = _expert_compute(
         disp, params, cfg,
         expert_slice=(local_offset, n_local) if slice_needed else None)
-    gathered = out_buf[safe_idx, safe_pos]            # (A, d)
-    gathered = gathered * (flat_gate * keep.astype(jnp.float32)).astype(x.dtype)[:, None]
-    out = jnp.zeros((T, d), x.dtype).at[token_of].add(gathered)
-    return out
+    return moe_combine(out_buf, aux, T, x.dtype)
 
 
 def capacity_of(n_tokens, m):

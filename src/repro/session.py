@@ -52,7 +52,8 @@ class Session:
                  setting: InferenceSetting, *, db=None, params=None,
                  wdtype: float = 2.0, max_seq: int = 256, tiers=TIERS,
                  overlap: bool = True, jit_engine: bool = True,
-                 quick_install: bool = True):
+                 quick_install: bool = True,
+                 expert_granular: Optional[bool] = None):
         self.cfg = cfg
         self.system = system
         self.setting = setting
@@ -64,7 +65,28 @@ class Session:
         self.db = db if db is not None else run_install(system,
                                                         quick=quick_install)
         self.est = TimingEstimator(self.db, system)
-        self.subs = build_graph(cfg, wdtype=wdtype)
+        # MoE models default to expert-granular placement (DESIGN.md §9):
+        # the planner pins hot experts individually (routing stats seeded
+        # from the profile DB, refined online via the executor's EMA) and
+        # the runtime demand-streams only router-selected cold experts.
+        # An explicit True that cannot be honoured raises instead of being
+        # silently coerced (same contract as batcher(max_batch/fused)).
+        if expert_granular is None:
+            expert_granular = cfg.moe is not None and jit_engine
+        elif expert_granular:
+            if cfg.moe is None:
+                raise ValueError(
+                    "expert_granular=True requires an MoE config "
+                    f"({cfg.name} has no moe block)")
+            if not jit_engine:
+                raise ValueError("expert_granular=True requires the jitted "
+                                 "engine (jit_engine=True)")
+        self.expert_granular = bool(expert_granular)
+        routing = self.db.get_routing(cfg.name) if self.expert_granular \
+            else None
+        self.subs = build_graph(cfg, wdtype=wdtype,
+                                expert_granular=self.expert_granular,
+                                routing=routing)
         self.schedule: Schedule = build_schedule(budget_bytes, self.subs,
                                                  self.est, setting, tiers)
         self.replan_log: List[ScheduleDiff] = []
@@ -171,12 +193,28 @@ class Session:
         dtypes — any ``InferenceSetting`` field) and apply the delta live."""
         return self._replan(setting=replace(self.setting, **changes))
 
+    def _refresh_routing_stats(self):
+        """Fold the executor's online routing EMA back into the profile DB
+        and the expert shards' ``hot`` metadata, so the NEXT plan pins the
+        observed hot set rather than the seeded one (DESIGN.md §9)."""
+        if not self.expert_granular or self._executor is None:
+            return
+        ema = self._executor.expert_ema
+        if not ema:
+            return
+        for layer, freqs in ema.items():
+            self.db.set_routing(self.cfg.name, layer, freqs)
+        for s in self.subs:
+            if s.kind == "moe_expert" and s.layer in ema:
+                s.meta["hot"] = float(ema[s.layer][s.meta["expert"]])
+
     def _replan(self, budget_bytes: Optional[int] = None,
                 setting: Optional[InferenceSetting] = None) -> ScheduleDiff:
         if budget_bytes is not None:
             self.budget_bytes = budget_bytes
         if setting is not None:
             self.setting = setting
+        self._refresh_routing_stats()
         new = build_schedule(self.budget_bytes, self.subs, self.est,
                              self.setting, self.tiers)
         diff = self.schedule.diff(new)
@@ -220,6 +258,13 @@ class Session:
                 "rebind_evicted_bytes": ex.rebind_evicted_bytes,
                 "rebind_s": ex.rebind_s,
             }
+            if self.expert_granular:
+                out["executor"].update({
+                    "expert_hit_rate": ex.expert_hit_rate,
+                    "expert_demanded": ex.expert_demanded,
+                    "demanded_expert_bytes": ex.demanded_expert_bytes,
+                    "resident_expert_bytes": ex.resident_expert_bytes,
+                })
         if self._batcher is not None:
             out["serving"] = self._batcher.stats()
         return out

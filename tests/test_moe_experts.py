@@ -1,0 +1,345 @@
+"""Expert-granular placement & demand-streamed MoE (DESIGN.md §9).
+
+Headline invariants:
+
+- the expert-granular path is BIT-identical to the monolithic ``moe``
+  sub-layer — same masked-capacity math, placement never changes numerics
+  — including across a mid-stream ``update_budget`` expert swap;
+- per-decode-step streamed bytes scale with the *demanded* expert set
+  (``<= tokens * top_k`` shards) instead of ``n_experts``, and the
+  executor's byte accounting matches the schedule exactly:
+  ``streamed_bytes == static plan bytes + demanded_expert_bytes``;
+- the planner pins hot experts first from routing stats (profile-DB
+  seeded, EMA-refined) and ``Schedule.diff``/``rebind`` move single
+  experts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (CLI2, InferenceSetting, PipelinedExecutor,
+                        TimingEstimator, build_graph, build_schedule,
+                        expert_weight_bytes, run_install)
+from repro.core.serving import Request
+from repro.models import build_model
+from repro.session import Session
+
+ARCH = "qwen30b-a3b"
+
+
+@pytest.fixture(scope="module")
+def db():
+    return run_install(CLI2, quick=True)
+
+
+@pytest.fixture(scope="module")
+def moe_cfg():
+    return get_smoke_config(ARCH)
+
+
+@pytest.fixture(scope="module")
+def params(moe_cfg):
+    return build_model(moe_cfg).init(jax.random.PRNGKey(0))
+
+
+def schedules(cfg, db, budget_frac, batch=2, context=64, routing=None):
+    """(monolithic, expert-granular) schedules at the same budget."""
+    setting = InferenceSetting(batch=batch, context=context)
+    subs_m = build_graph(cfg, wdtype=2)
+    subs_g = build_graph(cfg, wdtype=2, expert_granular=True,
+                         routing=routing)
+    budget = int(sum(s.weight_bytes for s in subs_m) * budget_frac) + 1
+    sm = build_schedule(budget, subs_m, TimingEstimator(db, CLI2), setting)
+    sg = build_schedule(budget, subs_g, TimingEstimator(db, CLI2), setting)
+    return sm, sg
+
+
+# ------------------------------------------------------------ bit-identity
+@pytest.mark.parametrize("budget_frac", [0.2, 0.6, 2.0])
+def test_granular_bit_identical_to_monolithic(moe_cfg, params, db, key,
+                                              budget_frac):
+    """Same tokens at every budget: fully streamed experts, a mixed
+    hot/cold split, and everything pinned."""
+    sm, sg = schedules(moe_cfg, db, budget_frac)
+    assert sg.expert_granular and not sm.expert_granular
+    tokens = jax.random.randint(key, (2, 12), 0, moe_cfg.vocab)
+    ex_m = PipelinedExecutor(moe_cfg, params, sm, max_seq=64)
+    ex_g = PipelinedExecutor(moe_cfg, params, sg, max_seq=64)
+    last_m, kv_m, pos = ex_m.prefill(tokens)
+    last_g, kv_g, _ = ex_g.prefill(tokens)
+    assert np.array_equal(np.asarray(last_m), np.asarray(last_g))
+    start = jnp.argmax(last_m, -1).astype(jnp.int32)
+    gen_m, _ = ex_m.decode(start, kv_m, pos, steps=5)
+    gen_g, _ = ex_g.decode(start, kv_g, pos, steps=5)
+    assert np.array_equal(gen_m, gen_g)
+
+
+def test_granular_overlap_matches_sync(moe_cfg, params, db, key):
+    """Demand streaming through the prefetch pool changes WHEN expert
+    weights move, never the numerics."""
+    _, sg = schedules(moe_cfg, db, 0.2)
+    tokens = jax.random.randint(key, (2, 10), 0, moe_cfg.vocab)
+    ex_o = PipelinedExecutor(moe_cfg, params, sg, max_seq=64, overlap=True)
+    ex_s = PipelinedExecutor(moe_cfg, params, sg, max_seq=64, overlap=False)
+    last_o, kv_o, pos = ex_o.prefill(tokens)
+    last_s, kv_s, _ = ex_s.prefill(tokens)
+    assert np.array_equal(np.asarray(last_o), np.asarray(last_s))
+    start = jnp.argmax(last_o, -1).astype(jnp.int32)
+    gen_o, _ = ex_o.decode(start, kv_o, pos, steps=4)
+    gen_s, _ = ex_s.decode(start, kv_s, pos, steps=4)
+    assert np.array_equal(gen_o, gen_s)
+    assert ex_o.stats.streamed_bytes == ex_s.stats.streamed_bytes
+    assert ex_o.stats.demanded_expert_bytes > 0
+    assert ex_o.prefetch.stats.demanded_sublayers > 0
+
+
+# ------------------------------------------------------------ byte scaling
+def test_decode_streams_topk_not_all_experts(moe_cfg, params, db, key):
+    """The acceptance criterion: on an all-streamed-experts schedule a
+    decode step's expert traffic is bounded by the DEMANDED set
+    (<= batch * top_k shards per layer), strictly below the
+    ``n_experts``-proportional monolithic transfer, and the executor's
+    accounting matches the schedule byte for byte."""
+    m = moe_cfg.moe
+    sm, sg = schedules(moe_cfg, db, 0.2)
+    # fixture sanity: this budget pins routers but zero experts
+    pinned = sg.pinned_weight_map()
+    assert any(n.endswith("moe.router") for n in pinned)
+    assert not any(".expert" in n for n in pinned)
+
+    batch = 2
+    ex = PipelinedExecutor(moe_cfg, params, sg, max_seq=64)
+    tokens = jax.random.randint(key, (batch, 8), 0, moe_cfg.vocab)
+    last, kv, pos = ex.prefill(tokens)
+    e_wb = expert_weight_bytes(moe_cfg, 2)
+
+    steps = 4
+    before = (ex.stats.streamed_bytes, ex.stats.demanded_expert_bytes)
+    ex.decode(jnp.argmax(last, -1).astype(jnp.int32), kv, pos, steps=steps)
+    d_streamed = ex.stats.streamed_bytes - before[0]
+    d_demanded = ex.stats.demanded_expert_bytes - before[1]
+
+    # per decode step each layer demands at most min(E, batch*top_k)
+    # distinct experts — top_k-proportional, not n_experts-proportional
+    per_step_cap = moe_cfg.n_layers * min(m.n_experts, batch * m.top_k) * e_wb
+    all_experts = moe_cfg.n_layers * m.n_experts * e_wb
+    assert d_demanded <= steps * per_step_cap
+    assert d_demanded < steps * all_experts, \
+        "demand streaming moved every expert — not demand-driven"
+
+    # ExecStats-vs-Schedule byte match: streamed == the tier plans' static
+    # streamed placements + exactly the demanded expert shards
+    expected_static = sum(
+        p.sub.weight_bytes
+        for t in ex.stats.tiers_used
+        for p in sg.tiers[t].plan.static_stream_order()
+        if p.sub.name not in ex._pinned_names)
+    assert ex.stats.streamed_bytes == \
+        expected_static + ex.stats.demanded_expert_bytes
+    assert d_streamed >= d_demanded > 0
+
+
+def test_fused_serving_reports_expert_hit_rate(moe_cfg, db):
+    """Fused decode through the serving layer fills the per-pass expert
+    stats; at an ample budget every demanded expert is a pinned hit."""
+    total = sum(s.weight_bytes
+                for s in build_graph(moe_cfg, wdtype=2, expert_granular=True))
+    s = Session.open(moe_cfg, CLI2, int(total * 2.0) + 1,
+                     InferenceSetting(batch=2, context=64), db=db,
+                     max_seq=64)
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i, prompt=rng.randint(0, moe_cfg.vocab, size=6)
+                    .astype(np.int32), max_new_tokens=4) for i in range(2)]
+    s.serve(reqs, max_batch=2)
+    ex = s.executor.stats
+    assert ex.expert_demanded > 0
+    assert ex.expert_hit_rate == 1.0          # everything pinned
+    assert ex.demanded_expert_bytes == 0
+    assert ex.resident_expert_bytes == \
+        moe_cfg.n_layers * moe_cfg.moe.n_experts * expert_weight_bytes(
+            moe_cfg, 2)
+    assert ex.pass_expert_stats, "fused decode recorded no per-pass stats"
+    for ps in ex.pass_expert_stats:
+        assert ps["hits"] == ps["demanded"] and ps["hit_rate"] == 1.0
+    st = s.batcher().stats()
+    assert st["expert_hit_rate"] == 1.0
+    assert st["resident_expert_bytes"] == ex.resident_expert_bytes
+
+
+# ------------------------------------------------------- live expert swap
+def test_update_budget_swaps_single_experts_bit_identically(moe_cfg, db):
+    """Acceptance: pause a serve mid-decode, shrink the budget so
+    individual experts (not whole FFNs) leave the pin set, drain — tokens
+    equal an uninterrupted run at the final budget, rebind moved exactly
+    the diffed expert bytes, nothing re-traced."""
+    total = sum(s.weight_bytes
+                for s in build_graph(moe_cfg, wdtype=2, expert_granular=True))
+
+    def reqs():
+        rng = np.random.RandomState(0)
+        return [Request(rid=i, prompt=rng.randint(0, moe_cfg.vocab,
+                                                  size=6 + 3 * i)
+                        .astype(np.int32), max_new_tokens=8)
+                for i in range(2)]
+
+    def open_s(frac):
+        return Session.open(moe_cfg, CLI2, int(total * frac) + 1,
+                            InferenceSetting(batch=2, context=64), db=db,
+                            max_seq=64)
+
+    live = open_s(2.0)
+    assert live.expert_granular
+    r = reqs()
+    live.serve(r, max_batch=2, max_iterations=2)
+    assert any(sl is not None for sl in live.batcher().slots)
+    traces = dict(live.executor.engine.trace_counts)
+
+    diff = live.update_budget(int(total * 0.5) + 1)
+    moved = diff.to_evict + diff.to_pin
+    assert moved, "fixture bug: budget step did not change pins"
+    expert_moves = [n for n in moved if ".expert" in n]
+    assert expert_moves, "diff moved no individual experts"
+    assert all(".expert" in n or n.endswith("moe.router")
+               or "/attn" in n for n in moved)
+    ex = live.executor.stats
+    assert ex.rebind_pinned_bytes == diff.pin_bytes
+    assert ex.rebind_evicted_bytes == diff.evict_bytes
+
+    live.serve([])
+    assert all(x.done for x in r)
+    assert dict(live.executor.engine.trace_counts) == traces, \
+        "expert swap re-traced an engine step"
+
+    fresh = open_s(0.5)
+    r2 = reqs()
+    fresh.serve(r2, max_batch=2)
+    for a, b in zip(r, r2):
+        assert a.generated == b.generated, \
+            f"req {a.rid}: tokens changed across the expert swap"
+
+
+# ---------------------------------------------------- routing-stats pinning
+def test_hot_experts_pin_first_from_routing_stats(moe_cfg, db):
+    """Skewed routing stats must steer the pin budget to the hot experts;
+    the router shard pins with attention priority regardless."""
+    E = moe_cfg.moe.n_experts
+    hot_set = {1, 5}
+    freqs = [0.45 if e in hot_set else 0.1 / (E - 2) for e in range(E)]
+    routing = {layer: freqs for layer in range(moe_cfg.n_layers)}
+    subs = build_graph(moe_cfg, wdtype=2, expert_granular=True,
+                       routing=routing)
+    for s in subs:
+        if s.kind == "moe_expert":
+            assert s.meta["hot"] == pytest.approx(freqs[s.meta["expert"]])
+    # budget: scratch + attn + routers + kv + exactly 2 experts per layer
+    setting = InferenceSetting(batch=2, context=64)
+    e_wb = expert_weight_bytes(moe_cfg, 2)
+    sched_probe = build_schedule(1 << 40, subs, TimingEstimator(db, CLI2),
+                                 setting)
+    fixed = sum(b for n, b in sched_probe.pinned_weight_map().items()
+                if ".expert" not in n)
+    kv_bytes = sum(s.bytes_resident(setting) for s in subs
+                   if s.kind == "kv")
+    budget = sched_probe.scratch_bytes + fixed + kv_bytes \
+        + moe_cfg.n_layers * 2 * e_wb
+    sched = build_schedule(budget, subs, TimingEstimator(db, CLI2), setting)
+    pinned = sched.pinned_weight_map()
+    pinned_experts = sorted(n for n in pinned if ".expert" in n)
+    assert pinned_experts, "budget fixture pinned no experts"
+    for name in pinned_experts:
+        e = int(name.rsplit("expert", 1)[1])
+        assert e in hot_set, f"cold expert {name} pinned before the hot set"
+    assert all(f"L{i}/moe.router" in pinned
+               for i in range(moe_cfg.n_layers))
+
+
+def test_session_ema_refines_routing_stats(moe_cfg, db, key):
+    """Serving refines the EMA; a re-plan writes it back to the profile DB
+    and into the expert shards' hotness metadata."""
+    total = sum(s.weight_bytes
+                for s in build_graph(moe_cfg, wdtype=2, expert_granular=True))
+    s = Session.open(moe_cfg, CLI2, int(total * 2.0) + 1,
+                     InferenceSetting(batch=2, context=64), db=db,
+                     max_seq=64)
+    prompts = np.random.RandomState(2).randint(0, moe_cfg.vocab, (2, 8))
+    s.generate(prompts, 4)
+    ema = s.executor.expert_ema
+    assert sorted(ema) == list(range(moe_cfg.n_layers))
+    for freqs in ema.values():
+        assert freqs.sum() == pytest.approx(1.0)
+    s.update_budget(int(total * 1.0) + 1)
+    routing = s.db.get_routing(moe_cfg.name)
+    assert sorted(routing) == list(range(moe_cfg.n_layers))
+    for layer, freqs in routing.items():
+        np.testing.assert_allclose(freqs, ema[layer])
+    for sub in s.subs:
+        if sub.kind == "moe_expert":
+            assert sub.meta["hot"] == pytest.approx(
+                float(ema[sub.layer][sub.meta["expert"]]))
+
+
+# ------------------------------------------------------------ cost model
+def test_demand_probability_prefill_vs_decode(moe_cfg):
+    """Plan-side demand model: a prefill chunk touches ~every expert, a
+    decode token ~top_k/E of them."""
+    subs = build_graph(moe_cfg, wdtype=2, expert_granular=True)
+    exp = next(s for s in subs if s.kind == "moe_expert")
+    p_decode = TimingEstimator.demand_probability(exp, 1)
+    p_prefill = TimingEstimator.demand_probability(exp, 512)
+    m = moe_cfg.moe
+    assert p_decode == pytest.approx(min(1.0, m.top_k / m.n_experts))
+    assert p_prefill > 0.99
+    assert p_decode < p_prefill
+
+
+def test_granular_no_retrace_across_decode(moe_cfg, params, db, key):
+    _, sg = schedules(moe_cfg, db, 0.3)
+    ex = PipelinedExecutor(moe_cfg, params, sg, max_seq=64)
+    tokens = jax.random.randint(key, (1, 8), 0, moe_cfg.vocab)
+    last, kv, pos = ex.prefill(tokens)
+    gen, kv = ex.decode(jnp.argmax(last, -1).astype(jnp.int32), kv, pos,
+                        steps=1)
+    traces = dict(ex.engine.trace_counts)
+    assert traces["moe_route"] > 0 and traces["moe_experts"] > 0
+    ex.decode(jnp.asarray(gen[:, -1:]), kv, pos + 1, steps=4)
+    assert dict(ex.engine.trace_counts) == traces
+
+
+def test_explicit_expert_granular_conflicts_raise(moe_cfg, db):
+    """An explicit expert_granular=True that cannot be honoured raises
+    instead of silently coercing to whole-FFN scheduling (same contract
+    as batcher(max_batch/fused))."""
+    dense = get_smoke_config("yi-9b")
+    with pytest.raises(ValueError, match="MoE config"):
+        Session.open(dense, CLI2, 1 << 20, InferenceSetting(batch=1),
+                     db=db, expert_granular=True)
+    with pytest.raises(ValueError, match="jit_engine"):
+        Session.open(moe_cfg, CLI2, 1 << 20, InferenceSetting(batch=1),
+                     db=db, jit_engine=False, expert_granular=True)
+    # defaults: granular for MoE + jitted engine, monolithic otherwise
+    assert Session.open(moe_cfg, CLI2, 1 << 20, InferenceSetting(batch=1),
+                        db=db).expert_granular
+    assert not Session.open(moe_cfg, CLI2, 1 << 20,
+                            InferenceSetting(batch=1), db=db,
+                            jit_engine=False).expert_granular
+
+
+# ------------------------------------------------------------ scratch sizing
+def test_scratch_sized_from_largest_streamable_shard(moe_cfg, db):
+    """Satellite: the double-buffer is sized from a single expert after the
+    split — a smaller grant at ample budgets, and overlap (2 slots)
+    regained at tight budgets where the monolithic unit degraded to 1."""
+    sm, sg = schedules(moe_cfg, db, 2.0)
+    assert sg.scratch_bytes < sm.scratch_bytes
+    # tight budget: monolithic cannot double-buffer the whole MoE FFN
+    sm_t, sg_t = schedules(moe_cfg, db, 0.2)
+    subs_m = build_graph(moe_cfg, wdtype=2)
+    whole_moe = max(s.weight_bytes for s in subs_m if s.kind == "moe")
+    assert sm_t.scratch_bytes < 2 * whole_moe, \
+        "fixture bug: tight budget still double-buffers the monolithic FFN"
+    e_wb = expert_weight_bytes(moe_cfg, 2)
+    entry = sg_t.tiers[min(sg_t.tiers)]
+    assert entry.scratch_bytes - entry.act_bytes >= 2 * e_wb, \
+        "expert-granular scratch lost the double-buffer"

@@ -139,9 +139,13 @@ def test_scratch_budget_counts_dtype_batch_and_double_buffer(subs):
     # tokens in flight = max(tier, batch): batch beyond the tier grows it
     assert decide_scratch_budget(budget, subs, batched, 1) \
         > decide_scratch_budget(budget, subs, base, 1)
-    # an ample budget always grants the streaming double-buffer
-    max_w = max(s.weight_bytes for s in subs)
+    # an ample budget always grants the streaming double-buffer, sized from
+    # the largest STREAMABLE shard — embed/output heads never enter the
+    # scratch, so they must not inflate it
+    from repro.core import STREAMABLE_KINDS
+    max_w = max(s.weight_bytes for s in subs if s.kind in STREAMABLE_KINDS)
     assert s_base >= 2 * max_w
+    assert s_base < 2 * max(s.weight_bytes for s in subs)
 
 
 def test_moe_graph_has_expert_sublayers():

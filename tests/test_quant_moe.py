@@ -4,6 +4,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core import (CLI2, InferenceSetting, PipelinedExecutor,
+                        TimingEstimator, build_graph, build_schedule,
+                        expert_weight_bytes, run_install)
 from repro.models import build_model
 
 
@@ -35,6 +38,53 @@ def test_int8_param_tree_has_scales(key):
     assert lp["w_gate"].dtype == jnp.int8
     assert "s_gate" in lp and lp["s_gate"].dtype == jnp.float32
     assert lp["s_gate"].shape[-3:] == (cfg.moe.n_experts, 1, 1)
+
+
+def test_int8_expert_byte_accounting(key):
+    """Satellite regression: the plan's ``weight_bytes`` for int8-quantised
+    experts must equal the bytes the executor actually transfers (int8
+    matrices + fp32 scales), NOT the bf16 size the seed accounting
+    assumed — for the monolithic ``moe`` sub-layer and each expert
+    shard."""
+    cfg = get_smoke_config("qwen30b-a3b").replace(expert_quant="int8")
+    d, f, E = cfg.d_model, cfg.moe.d_expert, cfg.moe.n_experts
+    e_wb = expert_weight_bytes(cfg, 2)
+    assert e_wb == 3 * d * f + 3 * 4          # int8 stacks + fp32 scales
+    assert e_wb < 3 * d * f * 2               # strictly below the bf16 size
+
+    subs = build_graph(cfg, wdtype=2, expert_granular=True)
+    subs_m = build_graph(cfg, wdtype=2)
+    assert all(s.weight_bytes == e_wb for s in subs
+               if s.kind == "moe_expert")
+    assert all(s.weight_bytes == E * e_wb for s in subs_m
+               if s.kind == "moe")
+
+    # executor-side: the host trees device_put for an expert shard and for
+    # the whole FFN weigh exactly what the plan accounts
+    params = build_model(cfg).init(key)
+    db = run_install(CLI2, quick=True)
+    budget = int(sum(s.weight_bytes for s in subs) * 0.2) + 1
+    sched = build_schedule(budget, subs, TimingEstimator(db, CLI2),
+                           InferenceSetting(batch=1, context=64))
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=64)
+
+    def tree_bytes(tree):
+        return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+    exp = next(s for s in subs if s.kind == "moe_expert")
+    assert tree_bytes(ex._subtree(exp)) == exp.weight_bytes
+    moe = next(s for s in subs_m if s.kind == "moe")
+    moe_tree = ex.layer_params[moe.layer]["moe"]
+    expert_part = {k: v for k, v in moe_tree.items() if k != "router"}
+    assert tree_bytes(expert_part) == moe.weight_bytes
+
+    # streamed-byte stats follow: a decode step's demanded bytes are a
+    # whole multiple of the true int8 shard size
+    tokens = jax.random.randint(key, (1, 8), 0, cfg.vocab)
+    last, kv, pos = ex.prefill(tokens)
+    ex.decode(jnp.argmax(last, -1).astype(jnp.int32), kv, pos, steps=2)
+    assert ex.stats.demanded_expert_bytes > 0
+    assert ex.stats.demanded_expert_bytes % e_wb == 0
 
 
 def test_int8_decode_consistency(key):

@@ -1,14 +1,22 @@
-"""VLMOpt: VRAM-demand model invariants + runnable flash vision encoder."""
+"""VLMOpt: VRAM-demand model invariants + runnable flash vision encoder.
+
+The placement-math block (``vision_vram_demand`` / ``vlm_peak_vram`` /
+``min_feasible_budget``) is exercised across the full
+offload x flash x overlap-avoidance grid at both benchmark resolutions —
+these drive bench_table8's OOM grid, so every term must decompose
+exactly."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.vlmopt import (
-    VisionConfig, init_vision_params, n_vision_tokens, vision_encode,
-    vision_vram_demand, vlm_peak_vram)
+    VisionConfig, init_vision_params, min_feasible_budget, n_vision_tokens,
+    vision_encode, vision_vram_demand, vision_weight_bytes, vlm_peak_vram)
 
 VC = VisionConfig()
+RES_GRID = ("720p", "1440p")
+LANG = int(4e9)
 
 
 def test_flash_reduces_attn_memory():
@@ -39,6 +47,91 @@ def test_vram_demand_monotone_in_resolution():
         ds = [vlm_peak_vram(VC, r, int(1e9), vlmopt=opt)
               for r in ("480p", "720p", "1080p", "1440p")]
         assert all(a <= b for a, b in zip(ds, ds[1:]))
+
+
+@pytest.mark.parametrize("res", RES_GRID)
+@pytest.mark.parametrize("flash", [False, True])
+@pytest.mark.parametrize("offload", [False, True])
+def test_vision_vram_demand_decomposes(res, offload, flash):
+    """Every (offload, flash) cell decomposes into weights + activations +
+    attention temporaries + stream buffer, term by term."""
+    n = n_vision_tokens(VC, res)
+    acts = 3 * n * VC.d * VC.dtype_bytes
+    if flash:
+        qc = min(1024, n)
+        attn_tmp = VC.heads * qc * min(n, 1024) * 4 + qc * VC.d * VC.dtype_bytes
+    else:
+        attn_tmp = 2 * VC.heads * n * n * 4
+    weights = 0 if offload else vision_weight_bytes(VC)
+    stream_buf = (2 * 4 * VC.d * VC.d * VC.dtype_bytes) if offload else 0
+    got = vision_vram_demand(VC, res, offload=offload, flash=flash)
+    assert got == weights + acts + attn_tmp + stream_buf
+
+
+@pytest.mark.parametrize("res", RES_GRID)
+def test_offload_trades_weights_for_stream_buffer(res):
+    """Offload removes the full weight stack and adds only the 2-slot
+    streaming double-buffer, independently of the flash knob."""
+    for flash in (False, True):
+        kept = vision_vram_demand(VC, res, offload=False, flash=flash)
+        off = vision_vram_demand(VC, res, offload=True, flash=flash)
+        assert kept - off == vision_weight_bytes(VC) \
+            - 2 * 4 * VC.d * VC.d * VC.dtype_bytes
+        assert off < kept
+
+
+@pytest.mark.parametrize("res", RES_GRID)
+def test_flash_term_independent_of_offload(res):
+    """Flash removes the O(N^2) score tensor under either residency."""
+    n = n_vision_tokens(VC, res)
+    for offload in (False, True):
+        full = vision_vram_demand(VC, res, offload=offload, flash=False)
+        flash = vision_vram_demand(VC, res, offload=offload, flash=True)
+        assert full - flash > 0.9 * 2 * VC.heads * n * n * 4
+
+
+@pytest.mark.parametrize("res", RES_GRID)
+def test_peak_vram_overlap_avoidance_grid(res):
+    """vlmopt=True peaks at max(vision, language) — overlap avoidance —
+    while vlmopt=False pays the sum of the un-optimised vision demand and
+    the language side."""
+    v_opt = vision_vram_demand(VC, res, offload=True, flash=True)
+    v_raw = vision_vram_demand(VC, res, offload=False, flash=False)
+    assert vlm_peak_vram(VC, res, LANG, vlmopt=True) == max(v_opt, LANG)
+    assert vlm_peak_vram(VC, res, LANG, vlmopt=False) == v_raw + LANG
+    # at 1440p the raw path's KQ scores alone dwarf the optimised peak
+    assert vlm_peak_vram(VC, res, LANG, vlmopt=False) \
+        > vlm_peak_vram(VC, res, LANG, vlmopt=True)
+
+
+@pytest.mark.parametrize("res", RES_GRID)
+def test_min_feasible_budget_matches_peak(res):
+    """The smallest workable budget IS the peak demand, both modes; the
+    vlmopt reduction at 1440p is the paper's order-of-magnitude cut."""
+    for opt in (False, True):
+        assert min_feasible_budget(VC, res, LANG, vlmopt=opt) \
+            == vlm_peak_vram(VC, res, LANG, vlmopt=opt)
+    assert min_feasible_budget(VC, res, LANG, vlmopt=True) \
+        <= min_feasible_budget(VC, res, LANG, vlmopt=False)
+
+
+def test_min_feasible_budget_monotone_in_language_share():
+    """More language pinning never shrinks the feasible budget, and under
+    overlap avoidance the vision side sets a floor."""
+    v = vision_vram_demand(VC, "1440p", offload=True, flash=True)
+    budgets = [min_feasible_budget(VC, "1440p", lang, vlmopt=True)
+               for lang in (0, int(1e9), int(8e9))]
+    assert budgets == sorted(budgets)
+    assert budgets[0] == v        # zero language: vision floor
+
+
+def test_q_chunk_shrinks_flash_working_set():
+    n = n_vision_tokens(VC, "1440p")
+    big = vision_vram_demand(VC, "1440p", offload=True, flash=True,
+                             q_chunk=n)
+    small = vision_vram_demand(VC, "1440p", offload=True, flash=True,
+                               q_chunk=128)
+    assert small < big
 
 
 def test_vision_encoder_flash_matches_ref(key):
