@@ -1,0 +1,130 @@
+"""Layer-major weight-stationary prefill benchmark (paper headline: TTFT
+up to 6.7x — the context phase is transfer-bound on VRAM-constrained
+clients, so loop order decides how often the streamed plan crosses the
+link).
+
+Runs dense ``yi-9b`` (smoke scale) at a streaming-heavy budget over three
+prompt lengths and compares the two prefill loop orders (DESIGN.md §10):
+
+- ``chunk_major`` (seed baseline): one full plan pass per chunk — a
+  C-chunk prompt moves C x the streamed plan bytes;
+- ``layer_major`` (default): one pass per PROMPT — every chunk runs
+  against each resident sub-layer before the stream advances, so the
+  streamed MB per prompt is flat in prompt length and TTFT grows with
+  compute only.
+
+Token bit-identity between the modes is hard-asserted, as is the
+acceptance criterion: layer-major TTFT strictly below chunk-major at the
+longest prompt, with ``estimate_ttft`` tracking the same 1x-vs-Cx split.
+
+    PYTHONPATH=src python -m benchmarks.run prefill
+
+``REPRO_BENCH_SMOKE=1`` shrinks the sweep to a CI-sized smoke run.
+"""
+from __future__ import annotations
+
+import os
+
+# bit-identity is asserted across differently-compiled paths: pin per-op
+# bf16 rounding exactly as tests/conftest.py does (see the comment there)
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_allow_excess_precision" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_allow_excess_precision=false").strip()
+
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+from benchmarks.common import get_db, write_csv  # noqa: E402
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core import (CLI2, InferenceSetting, PipelinedExecutor,  # noqa: E402
+                        TimingEstimator, build_graph, build_schedule)
+from repro.core.planner import estimate_ttft  # noqa: E402
+from repro.models import build_model  # noqa: E402
+
+ARCH = "yi-9b"
+BUDGET_FRAC = 0.15       # streaming-heavy: most sub-layers cross the link
+
+
+def _measure(ex, tokens, mode, repeats):
+    """Median prefill wall time + the per-prefill transfer entry."""
+    ex.prefill(tokens, prefill_mode=mode)          # warm compile off-clock
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        last, _, _ = ex.prefill(tokens, prefill_mode=mode)
+        times.append(time.perf_counter() - t0)
+    entry = ex.stats.prefill_stats[-1]
+    return float(np.median(times)), entry, np.asarray(last)
+
+
+def run():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    prompts = (16, 32, 64) if smoke else (32, 128, 512)
+    tier = 8 if smoke else 32
+    repeats = 5 if smoke else 7
+
+    cfg = get_smoke_config(ARCH)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    db = get_db("cli2")
+    setting = InferenceSetting(batch=1, context=max(prompts))
+    subs = build_graph(cfg, wdtype=2)
+    budget = int(sum(s.weight_bytes for s in subs) * BUDGET_FRAC) + 1
+    # a single small tier pins the chunk size, so C = prompt/tier and the
+    # two loop orders differ ONLY in when weights cross the link
+    sched = build_schedule(budget, subs, TimingEstimator(db, CLI2), setting,
+                           tiers=(tier,))
+    assert sched.tiers[tier].plan.streamed_weight_bytes() > 0, \
+        "fixture bug: nothing streamed at this budget"
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=2 * max(prompts))
+
+    rows = []
+    measured = {}
+    for T in prompts:
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (1, T), 0,
+                                    cfg.vocab)
+        res = {}
+        for mode in ("chunk_major", "layer_major"):
+            ttft, entry, last = _measure(ex, tokens, mode, repeats)
+            est = estimate_ttft(sched, T, mode=mode)
+            res[mode] = (ttft, entry, last, est)
+            rows.append([T, mode, entry["chunks"], entry["passes"],
+                         f"{ttft * 1e3:.2f}",
+                         f"{entry['streamed_bytes'] / 1e6:.4f}",
+                         f"{est * 1e3:.3f}"])
+            print(f"prefill,isl={T},{mode},ttft_ms,{ttft * 1e3:.2f},"
+                  f"streamed_mb_prompt,{entry['streamed_bytes'] / 1e6:.4f},"
+                  f"passes,{entry['passes']},est_ttft_ms,{est * 1e3:.3f}")
+        assert np.array_equal(res["layer_major"][2],
+                              res["chunk_major"][2]), \
+            "layer-major prefill diverged from the chunk-major baseline"
+        cm_e, lm_e = res["chunk_major"][1], res["layer_major"][1]
+        assert lm_e["passes"] == 1
+        assert cm_e["streamed_bytes"] == \
+            cm_e["chunks"] * lm_e["streamed_bytes"], \
+            "chunk-major did not re-stream the plan per chunk"
+        measured[T] = res
+
+    # acceptance: at the longest prompt the weight-stationary loop is
+    # strictly faster, and the planner's model tracks the same split
+    T = max(prompts)
+    cm_t, lm_t = measured[T]["chunk_major"][0], measured[T]["layer_major"][0]
+    assert lm_t < cm_t, (lm_t, cm_t)
+    assert measured[T]["layer_major"][3] < measured[T]["chunk_major"][3], \
+        "estimate_ttft does not reflect the 1x-streaming win"
+    cm_mb = measured[T]["chunk_major"][1]["streamed_bytes"]
+    lm_mb = measured[T]["layer_major"][1]["streamed_bytes"]
+    print(f"prefill,isl={T},ttft_speedup,{cm_t / lm_t:.2f}x,"
+          f"streamed_reduction,{cm_mb / max(lm_mb, 1):.2f}x")
+
+    path = write_csv("bench_prefill.csv", rows,
+                     ["isl", "mode", "chunks", "passes", "ttft_ms",
+                      "streamed_mb_prompt", "est_ttft_ms"])
+    print(f"prefill,csv,{path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -123,10 +123,18 @@ class TimingEstimator:
         return 1.0 - (1.0 - q) ** max(1, new_tokens)
 
     def _transfer_bytes(self, pl: Placement, plan: Plan, setting,
-                        new_tokens: int = 1) -> float:
-        """Per-iteration link traffic caused by this placement."""
+                        new_tokens: int = 1,
+                        include_streamed_weights: bool = True) -> float:
+        """Per-iteration link traffic caused by this placement.
+
+        ``include_streamed_weights=False`` drops the streamed-weight term
+        and keeps only the per-pass traffic that repeats every chunk (KV
+        residency, boundary hops are added by the caller) — the repeat
+        cost of a layer-major weight-stationary prefill chunk, where each
+        streamed shard crosses the link once per prompt (DESIGN.md §10).
+        """
         bytes_ = 0.0
-        if pl.streamed and pl.engine == "gpu":
+        if include_streamed_weights and pl.streamed and pl.engine == "gpu":
             w = pl.sub.weight_bytes
             if pl.sub.kind == "moe_expert":
                 w *= self.demand_probability(pl.sub, new_tokens)
@@ -156,11 +164,19 @@ class TimingEstimator:
         return 2.0 * new_tokens * d
 
     def plan_time(self, plan: Plan, new_tokens: int,
-                  setting: InferenceSetting) -> float:
+                  setting: InferenceSetting,
+                  include_streamed_weights: bool = True) -> float:
+        """Pipelined copy-compute pass time. With
+        ``include_streamed_weights=False`` the streamed weight bytes are
+        excluded: that is the cost of one *repeat* chunk of a layer-major
+        prefill, whose weights are already resident from the pass's single
+        streaming sweep (DESIGN.md §10)."""
         link_bw = self.sys.link_gbps * 1e9
         # first pass: will the link be busy? (contention decision)
-        total_xfer = sum(self._transfer_bytes(p, plan, setting, new_tokens)
-                         for p in plan.placements)
+        total_xfer = sum(
+            self._transfer_bytes(p, plan, setting, new_tokens,
+                                 include_streamed_weights)
+            for p in plan.placements)
         rough_compute = sum(
             self.sublayer_compute(p.sub, p.engine, new_tokens, setting)
             for p in plan.placements if p.sub.kind != "kv")
@@ -171,7 +187,8 @@ class TimingEstimator:
         compute_total = {"gpu": 0.0, "cpu": 0.0}
         prev = None
         for p in plan.placements:
-            xfer = self._transfer_bytes(p, plan, setting, new_tokens) \
+            xfer = self._transfer_bytes(p, plan, setting, new_tokens,
+                                        include_streamed_weights) \
                 + self._boundary_bytes(prev, p, new_tokens)
             link_done += xfer / link_bw
             c = 0.0

@@ -14,7 +14,12 @@ given shape reuses one executable:
   ``dynamic_update_index_in_dim`` — no per-layer Python lists, no host tree
   rebuilds inside the decode loop;
 - chunked prefill uses ``attend_cached`` (cache-wide mask, shapes
-  independent of position), decode (T==1) uses ``attend_decode``.
+  independent of position), decode (T==1) uses ``attend_decode``;
+- layer-major prefill (DESIGN.md §10) runs the ``*_prefill_step``
+  variants: chunk position AND valid length are traced scalars, so one
+  executable serves every chunk of every prompt — the tail chunk is padded
+  to the chunk size and its garbage positions are masked out of the KV
+  cache and the MoE routing capacity.
 
 ``trace_counts`` increments only while tracing, so tests can assert that
 decode steps stop re-tracing after the first step.
@@ -63,11 +68,15 @@ class SubLayerEngine:
         # is in-place; CPU ignores donation (and would warn), so skip there
         donate = (2, 3) if jax.default_backend() != "cpu" else ()
         self.attn_step = jax.jit(self._attn_step, donate_argnums=donate)
+        self.attn_prefill_step = jax.jit(self._attn_prefill_step,
+                                         donate_argnums=donate)
         self.attn_decode_step = jax.jit(self._attn_decode_step,
                                         donate_argnums=donate)
         self._ffn_step_jit = jax.jit(self._ffn_step,
                                      static_argnames=("streamed",))
         self.moe_step = jax.jit(self._moe_step)
+        self.moe_prefill_step = jax.jit(self._moe_prefill_step)
+        self.moe_route_prefill_step = jax.jit(self._moe_route_prefill_step)
         # expert-granular MoE phases (DESIGN.md §9): route-first so the
         # executor learns the demanded expert set, then one expert-compute
         # executable shared by the pinned and the streamed phase
@@ -99,6 +108,42 @@ class SubLayerEngine:
                                                      layer, 0)
         vstack = jax.lax.dynamic_update_index_in_dim(vstack, cache["v"],
                                                      layer, 0)
+        return x + out, kstack, vstack
+
+    def _attn_prefill_step(self, w, x, kstack, vstack, layer, pos, valid_len):
+        """Layer-major prefill attention (DESIGN.md §10).
+
+        Same math as ``_attn_step`` plus a masked cache write: the last
+        chunk of a prompt is padded to the chunk size, and the padded
+        positions must never land in KV (a later pass or decode step would
+        read them). ``pos`` and ``valid_len`` are traced i32 scalars, so
+        one executable serves every chunk — full or tail — of every prompt
+        length. Causality inside ``attend_cached`` already keeps valid
+        queries away from the padded keys (they sit at strictly later
+        positions), so the mask only has to protect the cache itself.
+        """
+        self.trace_counts["attn_prefill"] += 1
+        cfg = self.cfg
+        B, T, _ = x.shape
+        positions = (pos + jnp.arange(T)[None, :]) * jnp.ones((B, 1),
+                                                              jnp.int32)
+        h = rmsnorm(x, w["ln1"], cfg.norm_eps)
+        ck = jax.lax.dynamic_index_in_dim(kstack, layer, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(vstack, layer, 0, keepdims=False)
+        q, k, v = attn_mod.qkv_project(w["attn"], cfg, h, positions)
+        q = self.policy.constrain(q, "heads")
+        ck_new, cv_new = attn_mod.cache_update(ck, cv, k, v, pos)
+        S = ck.shape[2]
+        keep = (jnp.arange(S) < pos + valid_len)[None, None, :, None]
+        ck = jnp.where(keep, ck_new, ck)
+        cv = jnp.where(keep, cv_new, cv)
+        ck = self.policy.constrain(ck, "kv_cache")
+        cv = self.policy.constrain(cv, "kv_cache")
+        o = attn_mod.attend_cached(q, ck, cv, pos)
+        o = self.policy.constrain(o, "heads")
+        out = o.reshape(B, T, -1) @ w["attn"]["wo"]
+        kstack = jax.lax.dynamic_update_index_in_dim(kstack, ck, layer, 0)
+        vstack = jax.lax.dynamic_update_index_in_dim(vstack, cv, layer, 0)
         return x + out, kstack, vstack
 
     def _attn_decode_step(self, w, x, kstack, vstack, layer, pos_vec, active):
@@ -162,6 +207,20 @@ class SubLayerEngine:
         h = mlp_mod.moe_ffn(w["moe"], cfg, h, self.policy)
         return x + h
 
+    def _moe_prefill_step(self, w, x, valid_len):
+        """Monolithic MoE for a layer-major prefill chunk (DESIGN.md §10):
+        positions >= ``valid_len`` (the padded tail) are routed to an
+        out-of-range expert id so they claim no dispatch capacity and
+        contribute nothing to the combine — a padded chunk is bit-identical
+        to the unpadded one on its valid positions."""
+        self.trace_counts["moe_prefill"] += 1
+        cfg = self.cfg
+        B, T, _ = x.shape
+        valid = jnp.broadcast_to(jnp.arange(T)[None, :] < valid_len, (B, T))
+        h = rmsnorm(x, w["ln2"], cfg.norm_eps)
+        h = mlp_mod.moe_ffn(w["moe"], cfg, h, self.policy, valid=valid)
+        return x + h
+
     # ------------------------------------------------ expert-granular moe
     # The monolithic ``moe_step`` splits into three jitted phases
     # (DESIGN.md §9) so the executor can demand-stream cold experts:
@@ -188,6 +247,26 @@ class SubLayerEngine:
         B, T, d = x.shape
         h = rmsnorm(x, w["ln2"], cfg.norm_eps).reshape(B * T, d)
         gates, idx, _ = mlp_mod._route(h, w["router"], m)
+        cap = mlp_mod.capacity_of(B * T, m)
+        disp, aux = mlp_mod.moe_dispatch(h, gates, idx, m, m.n_experts, 0,
+                                         cap)
+        return disp, aux, idx
+
+    def _moe_route_prefill_step(self, w, x, valid_len):
+        """Masked routing for a layer-major prefill chunk (DESIGN.md §10):
+        identical to ``_moe_route_step`` except padded positions (>=
+        ``valid_len``) route to expert id E — out of range, so they claim
+        no capacity, never enter the demanded set the executor syncs to
+        the host, and the combine gathers nothing for them. For a full
+        chunk the mask is all-true and the maths is bit-identical."""
+        self.trace_counts["moe_route_prefill"] += 1
+        cfg = self.cfg
+        m = cfg.moe
+        B, T, d = x.shape
+        valid = jnp.broadcast_to(jnp.arange(T)[None, :] < valid_len, (B, T))
+        h = rmsnorm(x, w["ln2"], cfg.norm_eps).reshape(B * T, d)
+        gates, idx, _ = mlp_mod._route(h, w["router"], m)
+        idx = jnp.where(valid.reshape(B * T)[:, None], idx, m.n_experts)
         cap = mlp_mod.capacity_of(B * T, m)
         disp, aux = mlp_mod.moe_dispatch(h, gates, idx, m, m.n_experts, 0,
                                          cap)

@@ -53,6 +53,13 @@ class ExecStats:
     # one pass per active slot in the per-slot baseline
     decode_passes: int = 0
     pass_streamed_bytes: list = field(default_factory=list)
+    # prefill loop-order accounting (DESIGN.md §10): layer-major runs ONE
+    # plan pass per prompt (each streamed sub-layer crosses the link once),
+    # chunk-major one pass per chunk (C x the streamed plan bytes). Each
+    # prefill() call appends a dict with its mode, chunk count, passes,
+    # streamed/demanded bytes and hidden-vs-exposed copy seconds.
+    prefill_passes: int = 0
+    prefill_stats: list = field(default_factory=list)
     # expert-granular MoE accounting (DESIGN.md §9): how many expert shards
     # the routers demanded, how many of those were already pinned (hits),
     # and the demanded-vs-resident byte split. streamed_bytes ==
@@ -75,16 +82,38 @@ class ExecStats:
     rebind_s: float = 0.0
 
 
+def resolve_prefill_mode(prefill_mode, jit_engine: bool) -> str:
+    """``None`` -> the engine default (layer-major needs the jitted
+    engine's ``*_prefill_step`` variants, DESIGN.md §10). Shared by
+    ``PipelinedExecutor`` and ``Session.effective_prefill_mode`` so the
+    resolution rule cannot drift between the runner and the estimator."""
+    if prefill_mode is None:
+        return "layer_major" if jit_engine else "chunk_major"
+    return prefill_mode
+
+
 class PipelinedExecutor:
     """Dense/MoE decoder executor under a pipelined-sharding schedule."""
 
     def __init__(self, cfg, params, schedule: Schedule, max_seq: int = 512,
-                 overlap: bool = True, jit_engine: bool = True):
+                 overlap: bool = True, jit_engine: bool = True,
+                 prefill_mode: str | None = None):
         assert cfg.family in ("dense", "moe"), \
             "executor demo covers the dense/moe families"
         self.cfg = cfg
         self.schedule = schedule
         self.max_seq = max_seq
+        # layer-major weight-stationary prefill (DESIGN.md §10) needs the
+        # jitted engine's *_prefill_step variants; the eager baseline keeps
+        # the seed's chunk-major loop. An explicit "layer_major" that
+        # cannot be honoured raises (same contract as expert_granular).
+        prefill_mode = resolve_prefill_mode(prefill_mode, jit_engine)
+        if prefill_mode not in ("layer_major", "chunk_major"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if prefill_mode == "layer_major" and not jit_engine:
+            raise ValueError("prefill_mode='layer_major' requires the "
+                             "jitted engine (jit_engine=True)")
+        self.prefill_mode = prefill_mode
         self.policy = NoPolicy()
         self.stats = ExecStats()
         self._sync_exposed = 0.0
@@ -379,7 +408,27 @@ class PipelinedExecutor:
             self.prefetch.release(r_pl.sub.name)
         idx_host = np.asarray(idx)          # host sync: the demanded set
         self._record_routing(layer, idx_host)
-        demanded = np.unique(idx_host)
+        cold, streamed_cold = self._demand_cold_experts(
+            layer, np.unique(idx_host), by_name)
+        stack_pinned, mask = self._pinned_expert_stack(layer)
+        buf_p = eng.moe_experts_step(stack_pinned, disp)
+        if cold:
+            stream_stack = self._fold_cold_experts(layer, cold,
+                                                   streamed_cold)
+            buf_s = eng.moe_experts_step(stream_stack, disp)
+        else:
+            # nothing demanded was cold: the streamed buffer is never
+            # selected by the mask, reuse the pinned one
+            buf_s = buf_p
+        return eng.moe_combine_step(x, buf_p, buf_s, mask, aux)
+
+    def _demand_cold_experts(self, layer, demanded, by_name):
+        """Split the demanded expert ids of ``layer`` into pinned hits and
+        cold shards, account the hit stats, and enqueue the streamable
+        cold shards on the demand pool BEFORE the pinned phase runs — so
+        their copies hide under the resident experts' compute. Shared by
+        the per-chunk decode path and the layer-major union path.
+        Returns ``(cold, streamed_cold)`` placement lists."""
         cold = []
         for e in demanded:
             name = f"L{layer}/moe.expert{int(e)}"
@@ -388,50 +437,86 @@ class PipelinedExecutor:
             else:
                 cold.append(by_name[name])
         self.stats.expert_demanded += len(demanded)
-        # request the demanded cold experts BEFORE the pinned phase so
-        # their copies hide under the resident experts' compute
         streamed_cold = [pl for pl in cold if self._demand_active
                          and pl.streamed and pl.engine == "gpu"]
         if streamed_cold:
             self.prefetch.request(streamed_cold)
-        stack_pinned, mask = self._pinned_expert_stack(layer)
-        buf_p = eng.moe_experts_step(stack_pinned, disp)
-        if cold:
-            keys = self._expert_keys(layer)
-            moe = self.layer_params[layer]["moe"]
-            stream_stack = {k: self._expert_zeros(k, moe[k][0])
-                            for k in keys}
-            requested = {pl.sub.name for pl in streamed_cold}
-            for pl in cold:
-                name = pl.sub.name
-                self.stats.engine_calls[pl.engine] += 1
-                if name in requested:
-                    tree = self.prefetch.acquire(name)
-                    self.stats.streamed_bytes += pl.sub.weight_bytes
+        return cold, streamed_cold
+
+    def _fold_cold_experts(self, layer, cold, streamed_cold):
+        """Acquire every demanded cold expert shard of ``layer`` and fold
+        it into a zero-filled (E, ...) group stack. Fold-then-release: the
+        fold copies the shard into the stack, so each scratch slot frees
+        before the next acquire even under a single demand slot."""
+        eng = self.engine
+        keys = self._expert_keys(layer)
+        moe = self.layer_params[layer]["moe"]
+        stream_stack = {k: self._expert_zeros(k, moe[k][0]) for k in keys}
+        requested = {pl.sub.name for pl in streamed_cold}
+        for pl in cold:
+            name = pl.sub.name
+            self.stats.engine_calls[pl.engine] += 1
+            if name in requested:
+                tree = self.prefetch.acquire(name)
+                self.stats.streamed_bytes += pl.sub.weight_bytes
+                self.stats.demanded_expert_bytes += pl.sub.weight_bytes
+                rel = True
+            else:
+                # at-use transfer (overlap disabled, or a CPU-engine
+                # placement); _fetch_sync accounts streamed/at-use
+                tree = self._fetch_sync(pl)
+                rel = False
+                if pl.streamed and pl.engine == "gpu":
                     self.stats.demanded_expert_bytes += pl.sub.weight_bytes
-                    rel = True
-                else:
-                    # at-use transfer (overlap disabled, or a CPU-engine
-                    # placement); _fetch_sync accounts streamed/at-use
-                    tree = self._fetch_sync(pl)
-                    rel = False
-                    if pl.streamed and pl.engine == "gpu":
-                        self.stats.demanded_expert_bytes += \
-                            pl.sub.weight_bytes
-                # fold-then-release: the fold copies the shard into the
-                # group stack, so the scratch slot frees before the next
-                # acquire even under a single demand slot
-                stream_stack = eng.fold_expert_step(
-                    stream_stack, tree,
-                    jnp.asarray(pl.sub.meta["expert"], jnp.int32))
-                if rel:
-                    self.prefetch.release(name)
-            buf_s = eng.moe_experts_step(stream_stack, disp)
+            stream_stack = eng.fold_expert_step(
+                stream_stack, tree,
+                jnp.asarray(pl.sub.meta["expert"], jnp.int32))
+            if rel:
+                self.prefetch.release(name)
+        return stream_stack
+
+    def _moe_layer_granular_chunks(self, layer, xs, valid_lens, by_name,
+                                   streaming):
+        """Expert-granular MoE under layer-major prefill (DESIGN.md §9,
+        §10): route EVERY chunk first, then demand-stream the union of the
+        routed cold experts once — each cold expert crosses the link once
+        per prompt instead of once per chunk. The pinned-expert phase of
+        every chunk computes while those copies fly; the streamed stack is
+        folded once and reused by every chunk's streamed phase (each
+        expert row of the batched einsum depends only on its own weights,
+        so the wider union stack never changes a chunk's bits)."""
+        eng = self.engine
+        E = self.cfg.moe.n_experts
+        r_pl = by_name[f"L{layer}/moe.router"]
+        w_r, rel_r = self._weights_for(r_pl, streaming)
+        self.stats.engine_calls[r_pl.engine] += len(xs)
+        routed = []
+        demanded_union = set()
+        for x, vl in zip(xs, valid_lens):
+            disp, aux, idx = eng.moe_route_prefill_step(w_r, x, vl)
+            idx_host = np.asarray(idx)
+            # padded positions carry the out-of-range sentinel id E: they
+            # must enter neither the demanded set nor the routing EMA
+            idx_host = idx_host[idx_host < E]
+            self._record_routing(layer, idx_host)
+            demanded_union.update(int(e) for e in np.unique(idx_host))
+            routed.append((disp, aux))
+        if rel_r:
+            self.prefetch.release(r_pl.sub.name)
+        cold, streamed_cold = self._demand_cold_experts(
+            layer, sorted(demanded_union), by_name)
+        stack_pinned, mask = self._pinned_expert_stack(layer)
+        bufs_p = [eng.moe_experts_step(stack_pinned, disp)
+                  for disp, _ in routed]
+        if cold:
+            stream_stack = self._fold_cold_experts(layer, cold,
+                                                   streamed_cold)
+            bufs_s = [eng.moe_experts_step(stream_stack, disp)
+                      for disp, _ in routed]
         else:
-            # nothing demanded was cold: the streamed buffer is never
-            # selected by the mask, reuse the pinned one
-            buf_s = buf_p
-        return eng.moe_combine_step(x, buf_p, buf_s, mask, aux)
+            bufs_s = bufs_p
+        return [eng.moe_combine_step(x, bp, bs, mask, aux)
+                for x, bp, bs, (_, aux) in zip(xs, bufs_p, bufs_s, routed)]
 
     # ------------------------------------------------------------ passes
     def _begin_pass(self, tier: int):
@@ -515,6 +600,10 @@ class PipelinedExecutor:
         """One pass over all sub-layers for a token chunk.
 
         kv: dict with stacked "k"/"v" arrays of shape (L, B, KV, S, hd).
+        Only the final position's logits are computed — prefill and decode
+        both consume just the last token, so the lm_head matmul over the
+        earlier chunk positions would be dead FLOPs and (T x vocab) dead
+        VRAM. Returns (B, 1, V) logits.
         """
         cfg = self.cfg
         by_name, streaming, started = self._begin_pass(
@@ -533,12 +622,15 @@ class PipelinedExecutor:
                 x, k, v, by_name, streaming,
                 lambda w, x, k, v, i: self._attn_sub(w, x, k, v, i, pos_arr,
                                                      pos))
+            # slice the final position BEFORE the head: the (B, 1, d) shape
+            # also matches the decode head call, so prefill shares its
+            # executable instead of compiling a (B, T, d) variant per tier
             if self.engine is not None:
                 logits = self.engine.head_step(self._final_dev,
-                                               self._unembed_dev, x)
+                                               self._unembed_dev, x[:, -1:])
             else:
-                x = rmsnorm(x, self._final_dev, cfg.norm_eps)
-                logits = x @ self._unembed_dev
+                xl = rmsnorm(x[:, -1:], self._final_dev, cfg.norm_eps)
+                logits = xl @ self._unembed_dev
         finally:
             self._end_pass(started)
         if self.engine is None:
@@ -597,19 +689,176 @@ class PipelinedExecutor:
         return {"k": jnp.zeros(shape, jnp.bfloat16),
                 "v": jnp.zeros(shape, jnp.bfloat16)}
 
-    def prefill(self, tokens):
-        """Chunked prefill at the planner-picked tier size."""
+    def prefill(self, tokens, kv=None, prefill_mode: str | None = None):
+        """Chunked prefill at the planner-picked tier size (DESIGN.md §10).
+
+        ``prefill_mode`` overrides the executor default for this call:
+        ``"layer_major"`` streams each sub-layer once per prompt and runs
+        every chunk against the resident weights (weight-stationary);
+        ``"chunk_major"`` is the chunk-major baseline, one full plan pass
+        per chunk. ``kv`` lets a caller (the serving batcher) prefill into
+        an existing cache view instead of a fresh one.
+        """
+        mode = prefill_mode if prefill_mode is not None else \
+            self.prefill_mode
+        if mode not in ("layer_major", "chunk_major"):
+            # same contract as the constructor: a typo'd override must not
+            # silently fall through to the chunk-major branch (and label
+            # its prefill_stats entry with the bogus mode)
+            raise ValueError(f"unknown prefill_mode {mode!r}")
+        if mode == "layer_major" and self.engine is None:
+            raise ValueError("prefill_mode='layer_major' requires the "
+                             "jitted engine (jit_engine=True)")
         B, T = tokens.shape
-        kv = self.init_kv(B)
-        tier = self.schedule.pick_tier(B * T)
-        chunk = max(1, min(T, max(1, tier // B)))
-        logits = None
-        pos = 0
-        while pos < T:
-            end = min(T, pos + chunk)
-            logits, kv = self._run_chunk(tokens[:, pos:end], kv, pos)
-            pos = end
+        if kv is None:
+            kv = self.init_kv(B)
+        if mode == "layer_major":
+            tier = self.schedule.pick_prefill_tier(B * T, min_tier=B)
+        else:
+            tier = self.schedule.pick_tier(B * T)
+        if tier // B < 1:
+            raise ValueError(
+                f"picked tier {tier} cannot chunk a batch of {B} sequences "
+                "(tier // batch < 1 token per sequence per chunk); widen "
+                "the tier table or shrink the batch")
+        before = self._prefill_snapshot()
+        if mode == "layer_major":
+            # always the full tier chunk — a short prompt pads up instead
+            # of shrinking the chunk, so ONE executable serves every
+            # prompt length at this tier (no re-trace across chunk counts
+            # or tails)
+            chunk = tier // B
+            logits, kv, ring_bytes = self._prefill_layer_major(
+                tokens, kv, chunk, tier)
+            chunks = -(-T // chunk)
+        else:
+            chunk = min(T, tier // B)
+            logits = None
+            pos = 0
+            chunks = 0
+            # chunk-major holds ONE chunk's residual at a time — the
+            # memory side of the memory-for-bandwidth trade (DESIGN.md §10)
+            ring_bytes = B * chunk * self.cfg.d_model * 2
+            while pos < T:
+                end = min(T, pos + chunk)
+                logits, kv = self._run_chunk(tokens[:, pos:end], kv, pos)
+                self.stats.prefill_passes += 1
+                chunks += 1
+                pos = end
+        self._record_prefill(mode, chunks, before, ring_bytes)
         return logits[:, -1:], kv, T
+
+    def _prefill_layer_major(self, tokens, kv, chunk: int, tier: int):
+        """Weight-stationary prefill (DESIGN.md §10): ONE prefetch session
+        per prompt; for each sub-layer in stream order, all chunks run
+        against the resident weights before the stream advances — so each
+        streamed/demanded shard crosses the link once per prompt instead
+        of once per chunk. Causally valid: chunk c's attention at layer L
+        reads only the layer-L KV prefix, which chunks 0..c-1 wrote
+        earlier in this same layer step. Per-chunk activations live in a
+        ring of C ``(B, chunk, d)`` buffers (total == one full-prompt
+        residual); the stacked KV cache is written in place as always. The
+        tail chunk is padded to ``chunk`` (one executable regardless of
+        chunk count or tail size) and masked out of the KV cache and the
+        MoE routing capacity by the engine's ``*_prefill_step`` variants.
+        """
+        cfg = self.cfg
+        eng = self.engine
+        B, T = tokens.shape
+        C = -(-T // chunk)
+        tail = T - (C - 1) * chunk
+        # pad the tail chunk to the chunk size so one executable serves any
+        # chunk count/tail — UNLESS (a) the padded cache-write window would
+        # run past max_seq (dynamic_update_slice clamps the start there,
+        # which would shift the write over valid positions) or (b) an MoE
+        # chunk would leave the dropless capacity regime (padding grows
+        # capacity_of's token count, and a truncating capacity could keep
+        # assignments the unpadded baseline drops). Either way the tail
+        # runs at its natural shape instead — one extra trace, bit-exact
+        # always.
+        pad_ok = C * chunk <= self.max_seq and (
+            cfg.moe is None
+            or mlp_mod.capacity_is_dropless(B * chunk, cfg.moe))
+        pad = C * chunk - T if pad_ok else 0
+        if pad:
+            tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
+        by_name, streaming, started = self._begin_pass(tier)
+        try:
+            k, v = kv["k"], kv["v"]
+            xs = [eng.embed_step(self._embed_dev,
+                                 tokens[:, c * chunk:
+                                        min((c + 1) * chunk, tokens.shape[1])])
+                  for c in range(C)]
+            pos_c = [jnp.asarray(c * chunk, jnp.int32) for c in range(C)]
+            valid_c = [jnp.asarray(chunk if c < C - 1 else tail, jnp.int32)
+                       for c in range(C)]
+            prev_engine = None
+            for i in range(cfg.n_layers):
+                pa = by_name[f"L{i}/attn"]
+                w, rel = self._weights_for(pa, streaming)
+                self.stats.engine_calls[pa.engine] += C
+                if prev_engine is not None and prev_engine != pa.engine:
+                    self.stats.boundary_hops += 1
+                prev_engine = pa.engine
+                for c in range(C):
+                    xs[c], k, v = eng.attn_prefill_step(
+                        w, xs[c], k, v, self._layer_ids[i], pos_c[c],
+                        valid_c[c])
+                if rel:
+                    self.prefetch.release(pa.sub.name)
+                if self.expert_granular:
+                    pf = by_name[f"L{i}/moe.router"]
+                    if prev_engine != pf.engine:
+                        self.stats.boundary_hops += 1
+                    prev_engine = pf.engine
+                    xs = self._moe_layer_granular_chunks(
+                        i, xs, valid_c, by_name, streaming)
+                    continue
+                pkey = f"L{i}/moe" if cfg.moe is not None else f"L{i}/ffn"
+                pf = by_name[pkey]
+                w, rel = self._weights_for(pf, streaming)
+                self.stats.engine_calls[pf.engine] += C
+                if prev_engine != pf.engine:
+                    self.stats.boundary_hops += 1
+                prev_engine = pf.engine
+                for c in range(C):
+                    if cfg.moe is not None:
+                        xs[c] = eng.moe_prefill_step(w, xs[c], valid_c[c])
+                    else:
+                        xs[c] = eng.ffn_step(w, xs[c], streamed=pf.streamed)
+                if rel:
+                    self.prefetch.release(pf.sub.name)
+            # final logits from the last VALID position only (the padded
+            # rows are garbage); (B, 1, d) shares the decode head
+            # executable
+            x_last = xs[-1][:, tail - 1:tail]
+            logits = eng.head_step(self._final_dev, self._unembed_dev,
+                                   x_last)
+        finally:
+            self._end_pass(started)
+        self.stats.prefill_passes += 1
+        # the realised activation ring: every chunk's residual held at
+        # once, ~one full-prompt residual (DESIGN.md §10 accounting)
+        ring_bytes = B * tokens.shape[1] * cfg.d_model * 2
+        return logits, {"k": k, "v": v}, ring_bytes
+
+    def _prefill_snapshot(self):
+        s = self.stats
+        return (s.streamed_bytes, s.demanded_expert_bytes, s.copy_s_hidden,
+                s.copy_s_exposed, s.prefill_passes)
+
+    def _record_prefill(self, mode, chunks, before, ring_bytes):
+        s = self.stats
+        s.prefill_stats.append({
+            "mode": mode,
+            "chunks": chunks,
+            "act_ring_bytes": ring_bytes,
+            "passes": s.prefill_passes - before[4],
+            "streamed_bytes": s.streamed_bytes - before[0],
+            "demanded_expert_bytes": s.demanded_expert_bytes - before[1],
+            "copy_s_hidden": s.copy_s_hidden - before[2],
+            "copy_s_exposed": s.copy_s_exposed - before[3],
+        })
 
     def decode(self, last_tokens, kv, pos, steps=8, greedy=True):
         """Greedy decode loop; returns generated tokens."""

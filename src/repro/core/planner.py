@@ -43,6 +43,11 @@ class TierEntry:
     est_time: float
     scratch_bytes: int = 0   # VRAM scratch granted at this tier
     act_bytes: int = 0       # activation reservation inside that scratch
+    # one weight-stationary repeat chunk (DESIGN.md §10): the plan's pass
+    # time with streamed weight bytes excluded — what every chunk after
+    # the first costs under layer-major prefill, where weights cross the
+    # link once per prompt instead of once per chunk
+    prefill_chunk_s: float = 0.0
 
 
 @dataclass
@@ -111,6 +116,34 @@ class Schedule:
         whole batch, never per request), so the iteration's plan is the one
         picked for ``active_slots`` tokens. See DESIGN.md §7."""
         return self.pick_tier(max(1, active_slots))
+
+    def prefill_time(self, batch_tokens: int, tier: int) -> float:
+        """Layer-major weight-stationary prefill cost at ``tier``
+        (DESIGN.md §10): streamed weights cross the link ONCE per prompt
+        while compute repeats per chunk, so TTFT is bounded by whichever
+        dominates — the single full pass (1x stream + one chunk's compute,
+        link-bound prompts) or chunks x the weight-stationary per-chunk
+        time (compute-bound prompts, the stream fully hidden)."""
+        e = self.tiers[tier]
+        chunks = math.ceil(batch_tokens / tier)
+        return max(e.est_time, chunks * e.prefill_chunk_s)
+
+    def pick_prefill_tier(self, batch_tokens: int, min_tier: int = 1) -> int:
+        """Chunk-size pick for layer-major prefill. Re-streaming no longer
+        penalises small chunks (the transfer term is per-prompt, not
+        per-chunk), so the optimum usually sits at a smaller tier — less
+        scratch, less padding — than ``pick_tier``'s, which pays the plan's
+        streamed bytes every chunk. ``min_tier`` floors the pick (the
+        executor needs ``tier >= batch`` for at least one token per
+        sequence per chunk); ties break toward the smaller tier."""
+        best, best_cost = None, float("inf")
+        for t in sorted(self.tiers):
+            if t < min_tier:
+                continue
+            cost = self.prefill_time(batch_tokens, t)
+            if cost < best_cost:
+                best, best_cost = t, cost
+        return best if best is not None else max(self.tiers)
 
     def time_for_tokens(self, batch_tokens: int) -> float:
         t = self.pick_tier(batch_tokens)
@@ -317,8 +350,16 @@ def plan_tier(budget: int, subs: List[SubLayer], est: TimingEstimator,
     for p in plans:
         p.est_time = est.plan_time(p, tier, setting)
     best = min(plans, key=lambda p: p.est_time)
+    # the weight-stationary repeat cost (DESIGN.md §10): same plan, same
+    # chunk, streamed weight bytes excluded; restore detail afterwards so
+    # the full-pass breakdown stays the headline one
+    detail = best.detail
+    chunk_s = est.plan_time(best, tier, setting,
+                            include_streamed_weights=False)
+    best.detail = detail
     return TierEntry(best, best.est_time, scratch_bytes=scratch,
-                     act_bytes=activation_bytes(subs, setting, tier))
+                     act_bytes=activation_bytes(subs, setting, tier),
+                     prefill_chunk_s=chunk_s)
 
 
 def build_schedule(budget_bytes: int, subs: List[SubLayer],
@@ -338,9 +379,16 @@ def build_schedule(budget_bytes: int, subs: List[SubLayer],
 
 
 # ---------------------------------------------------------------- metrics
-def estimate_ttft(sched: Schedule, isl: int) -> float:
-    """Context phase: chunked prefill at the chosen tier."""
-    return sched.time_for_tokens(isl)
+def estimate_ttft(sched: Schedule, isl: int,
+                  mode: str = "layer_major") -> float:
+    """Context phase. The default models the layer-major weight-stationary
+    prefill (DESIGN.md §10): streamed plan bytes cross the link once per
+    prompt, compute repeats per chunk. ``mode="chunk_major"`` keeps the
+    chunk-major model — every chunk re-pays the plan's full transfer, so
+    the TTFT transfer term grows linearly with prompt length."""
+    if mode == "chunk_major":
+        return sched.time_for_tokens(isl)
+    return sched.prefill_time(isl, sched.pick_prefill_tier(isl))
 
 
 def estimate_tps(sched: Schedule, batch: int = 1) -> float:

@@ -79,13 +79,23 @@ class ContinuousBatcher:
                  max_batch: int = 4, max_seq: int = 256, fused: bool = True,
                  overlap: bool = True, jit_engine: bool = True,
                  executor: Optional[PipelinedExecutor] = None,
-                 session=None):
+                 session=None, prefill_mode: Optional[str] = None):
         self.cfg = cfg
         self._session = session
         if executor is not None:
             # constructor-from-session path (DESIGN.md §8): share a live
             # executor instead of building one, so a Session can rebind the
-            # schedule under this batcher without dropping its KV slots
+            # schedule under this batcher without dropping its KV slots.
+            # A conflicting explicit prefill_mode raises instead of being
+            # silently ignored (same contract as Session.batcher's
+            # max_batch/fused) — the shared executor's default governs;
+            # per-call overrides go through executor.prefill(prefill_mode=)
+            if prefill_mode is not None \
+                    and prefill_mode != executor.prefill_mode:
+                raise ValueError(
+                    f"batcher executor runs prefill_mode="
+                    f"{executor.prefill_mode!r}; cannot build with "
+                    f"{prefill_mode!r} (set it on the Session/executor)")
             self.ex = executor
             self.schedule = executor.schedule
             self.max_seq = executor.max_seq
@@ -95,7 +105,8 @@ class ContinuousBatcher:
             self.max_seq = max_seq
             self.ex = PipelinedExecutor(cfg, params, schedule,
                                         max_seq=max_seq, overlap=overlap,
-                                        jit_engine=jit_engine)
+                                        jit_engine=jit_engine,
+                                        prefill_mode=prefill_mode)
         self.max_batch = max_batch
         # the fused step runs through the jitted engine's batched decode
         self.fused = fused and jit_engine
@@ -174,16 +185,21 @@ class ContinuousBatcher:
                 f"({req.max_new_tokens}) exceeds max_seq ({self.max_seq})")
 
     def _prefill_slot(self, slot: int, req: Request):
-        """Chunked prefill of one request at the planner-picked tier."""
+        """Chunked prefill of one request through the executor's prefill
+        path (layer-major weight-stationary by default, DESIGN.md §10)
+        against the shared KV slot: each streamed sub-layer crosses the
+        link once per admitted prompt, not once per chunk."""
         T = len(req.prompt)
-        tier = self.schedule.pick_tier(T)
-        chunk = max(1, min(T, tier))
-        pos = 0
         tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        while pos < T:
-            end = min(T, pos + chunk)
-            logits = self._run_slot(slot, tokens[:, pos:end], pos)
-            pos = end
+        kv_slot = {
+            "k": self.kv["k"][:, slot:slot + 1],
+            "v": self.kv["v"][:, slot:slot + 1],
+        }
+        n_tiers = len(self.ex.stats.tiers_used)
+        logits, kv_slot, _ = self.ex.prefill(tokens, kv=kv_slot)
+        self.kv["k"] = self.kv["k"].at[:, slot:slot + 1].set(kv_slot["k"])
+        self.kv["v"] = self.kv["v"].at[:, slot:slot + 1].set(kv_slot["v"])
+        self.tier_log.extend(self.ex.stats.tiers_used[n_tiers:])
         nxt = int(greedy_token(logits[0, -1]))
         req.generated.append(nxt)
         req.first_token_at = time.perf_counter()
@@ -330,6 +346,14 @@ class ContinuousBatcher:
                                          if iters else 0.0),
             "mean_iter_moved_bytes": (float(np.mean(self.iter_moved_bytes))
                                       if self.iter_moved_bytes else 0.0),
+            # prefill loop order (DESIGN.md §10): passes and streamed bytes
+            # per admitted prompt — layer-major holds these at 1 pass / 1x
+            # plan bytes regardless of chunk count
+            "prefill_passes": self.ex.stats.prefill_passes,
+            "mean_prefill_streamed_bytes": (
+                float(np.mean([p["streamed_bytes"]
+                               for p in self.ex.stats.prefill_stats]))
+                if self.ex.stats.prefill_stats else 0.0),
             # live re-plans applied under this batcher (DESIGN.md §8)
             "rebudgets": len(self.rebudget_log),
             "rebind_s": self.ex.stats.rebind_s,

@@ -150,14 +150,19 @@ def moe_combine(out_buf, aux, n_tokens, dtype):
     return jnp.zeros((n_tokens, d), dtype).at[token_of].add(gathered)
 
 
-def _moe_local(x, params, cfg, n_local, local_offset, capacity):
+def _moe_local(x, params, cfg, n_local, local_offset, capacity, valid=None):
     """Core MoE over a local token set against experts [offset, offset+n_local).
 
     x: (T, d). Returns (T, d) partial output covering only local experts.
+    ``valid`` (optional (T,) bool) masks padded tokens: they route to the
+    out-of-range expert id E — never local on any rank — so they claim no
+    capacity and contribute nothing to the combine (DESIGN.md §10).
     """
     m = cfg.moe
     T, d = x.shape
     gates, idx, _ = _route(x, params["router"], m)
+    if valid is not None:
+        idx = jnp.where(valid[:, None], idx, m.n_experts)
     disp, aux = moe_dispatch(x, gates, idx, m, n_local, local_offset,
                              capacity)
     # Slice expert weights only when they are still global-shaped (the EP
@@ -167,6 +172,19 @@ def _moe_local(x, params, cfg, n_local, local_offset, capacity):
         disp, params, cfg,
         expert_slice=(local_offset, n_local) if slice_needed else None)
     return moe_combine(out_buf, aux, T, x.dtype)
+
+
+DROPLESS_MAX_ASSIGN = 4096
+
+
+def capacity_is_dropless(n_tokens, m) -> bool:
+    """True when ``capacity_of`` is in its dropless regime: capacity ==
+    n_tokens bounds every expert's worst-case load, so no (token, choice)
+    assignment can be dropped. Layer-major prefill may pad a tail chunk
+    only here — padding grows the token count and thus the capacity, and
+    in the truncating regime the padded run could keep assignments the
+    unpadded chunk-major baseline drops (DESIGN.md §10)."""
+    return n_tokens * m.top_k <= DROPLESS_MAX_ASSIGN
 
 
 def capacity_of(n_tokens, m):
@@ -179,17 +197,27 @@ def capacity_of(n_tokens, m):
     single expert receives at most n_tokens assignments — the worst case is
     n_tokens, not n_tokens*top_k (a lossless 8x padding cut at decode for
     top-8 models; EXPERIMENTS.md §Perf iteration C1)."""
-    if n_tokens * m.top_k <= 4096:
+    if capacity_is_dropless(n_tokens, m):
         return n_tokens
     return max(1, int(n_tokens * m.top_k * m.capacity_factor / m.n_experts))
 
 
-def moe_ffn(params, cfg, x, policy):
-    """Single-device / global-semantics MoE. x: (B, T, d)."""
+def moe_ffn(params, cfg, x, policy, valid=None):
+    """Single-device / global-semantics MoE. x: (B, T, d).
+
+    ``valid`` (optional (B, T) bool) marks real tokens: positions with
+    ``False`` are routed to expert id E — out of dispatch range — so they
+    claim no capacity slot and contribute zero output. Layer-major prefill
+    uses this for its padded tail chunk (DESIGN.md §10); with ``valid``
+    all-true the masking is the identity and the maths is bit-identical to
+    the unmasked path.
+    """
+    m = cfg.moe
     B, T, d = x.shape
     xf = x.reshape(B * T, d)
-    cap = capacity_of(B * T, cfg.moe)
-    out = _moe_local(xf, params, cfg, cfg.moe.n_experts, 0, cap)
+    cap = capacity_of(B * T, m)
+    out = _moe_local(xf, params, cfg, m.n_experts, 0, cap,
+                     valid=None if valid is None else valid.reshape(B * T))
     return out.reshape(B, T, d)
 
 

@@ -53,7 +53,8 @@ class Session:
                  wdtype: float = 2.0, max_seq: int = 256, tiers=TIERS,
                  overlap: bool = True, jit_engine: bool = True,
                  quick_install: bool = True,
-                 expert_granular: Optional[bool] = None):
+                 expert_granular: Optional[bool] = None,
+                 prefill_mode: Optional[str] = None):
         self.cfg = cfg
         self.system = system
         self.setting = setting
@@ -62,6 +63,17 @@ class Session:
         self.tiers = tiers
         self.overlap = overlap
         self.jit_engine = jit_engine
+        # layer-major weight-stationary prefill is the default on the
+        # jitted engine (DESIGN.md §10); "chunk_major" keeps the baseline.
+        # An explicit "layer_major" that cannot be honoured raises here —
+        # not lazily at first executor use (same contract as
+        # expert_granular below).
+        if prefill_mode not in (None, "layer_major", "chunk_major"):
+            raise ValueError(f"unknown prefill_mode {prefill_mode!r}")
+        if prefill_mode == "layer_major" and not jit_engine:
+            raise ValueError("prefill_mode='layer_major' requires the "
+                             "jitted engine (jit_engine=True)")
+        self.prefill_mode = prefill_mode
         self.db = db if db is not None else run_install(system,
                                                         quick=quick_install)
         self.est = TimingEstimator(self.db, system)
@@ -125,7 +137,8 @@ class Session:
                 "planning-only"
             self._executor = PipelinedExecutor(
                 self.cfg, self.params, self.schedule, max_seq=self.max_seq,
-                overlap=self.overlap, jit_engine=self.jit_engine)
+                overlap=self.overlap, jit_engine=self.jit_engine,
+                prefill_mode=self.prefill_mode)
         return self._executor
 
     def batcher(self, max_batch: Optional[int] = None,
@@ -229,11 +242,21 @@ class Session:
         self.replan_log.append(diff)
         return diff
 
+    @property
+    def effective_prefill_mode(self) -> str:
+        """The mode the executor's prefill actually runs (the stored knob
+        resolved through the executor's own rule, DESIGN.md §10)."""
+        from repro.core.executor import resolve_prefill_mode
+        return resolve_prefill_mode(self.prefill_mode, self.jit_engine)
+
     # ------------------------------------------------------------ estimates
     def estimates(self, isl: Optional[int] = None) -> dict:
-        """Planner-side TTFT/TPS estimates for the bound conditions."""
+        """Planner-side TTFT/TPS estimates for the bound conditions. The
+        TTFT model follows the session's prefill mode — a chunk-major
+        session must not advertise the layer-major 1x-stream TTFT."""
         isl = isl if isl is not None else self.setting.context
-        return {"ttft_s": estimate_ttft(self.schedule, isl),
+        return {"ttft_s": estimate_ttft(self.schedule, isl,
+                                        mode=self.effective_prefill_mode),
                 "tps": estimate_tps(self.schedule, self.setting.batch),
                 "pinned_bytes": self.schedule.pinned_bytes,
                 "scratch_bytes": self.schedule.scratch_bytes}
@@ -247,12 +270,30 @@ class Session:
                "scratch_bytes": self.schedule.scratch_bytes}
         if self._executor is not None:
             ex = self._executor.stats
+            pf = ex.prefill_stats
             out["executor"] = {
                 "streamed_bytes": ex.streamed_bytes,
                 "staged_bytes": ex.staged_bytes,
                 "engine_calls": dict(ex.engine_calls),
                 "copy_s_hidden": ex.copy_s_hidden,
                 "copy_s_exposed": ex.copy_s_exposed,
+                # prefill loop-order accounting (DESIGN.md §10): passes per
+                # prompt (layer-major: 1), streamed bytes per prompt (1x
+                # the plan vs chunk-major's Cx) and the per-prefill
+                # hidden/exposed copy split behind bench_figure2's TTFT
+                "prefill_passes": ex.prefill_passes,
+                "prefills": len(pf),
+                # per-prefill "streamed_bytes" already folds the demanded
+                # expert bytes in (executor invariant: streamed == static
+                # plan + demanded)
+                "prefill_streamed_bytes_per_prompt": (
+                    float(np.mean([p["streamed_bytes"] for p in pf]))
+                    if pf else 0.0),
+                "prefill_copy_s_hidden": sum(p["copy_s_hidden"]
+                                             for p in pf),
+                "prefill_copy_s_exposed": sum(p["copy_s_exposed"]
+                                              for p in pf),
+                "prefill_stats": list(pf),
                 "rebinds": ex.rebinds,
                 "rebind_pinned_bytes": ex.rebind_pinned_bytes,
                 "rebind_evicted_bytes": ex.rebind_evicted_bytes,

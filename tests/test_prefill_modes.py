@@ -1,0 +1,368 @@
+"""Layer-major weight-stationary prefill (DESIGN.md §10).
+
+Headline invariants:
+
+- layer-major prefill is BIT-identical to the chunk-major baseline —
+  logits, KV cache and decoded tokens — on dense and MoE models
+  (expert-granular included), overlap on and off, with multi-chunk
+  prompts and an odd (padded+masked) tail chunk;
+- per-prompt streamed+demanded bytes are <= 1x the tier plan's streamed
+  bytes (each sub-layer crosses the link once per PROMPT), while the
+  chunk-major baseline measures ~C x for a C-chunk prompt;
+- one jitted executable serves every chunk count and tail size (no
+  re-tracing when the prompt length varies), and the prefill head shares
+  the decode head executable (final-position-only logits);
+- the planner's ``estimate_ttft`` tracks the 1x-streaming behaviour.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (CLI2, InferenceSetting, PipelinedExecutor,
+                        TimingEstimator, build_graph, build_schedule,
+                        run_install)
+from repro.core.planner import estimate_ttft
+from repro.session import Session
+
+
+@pytest.fixture(scope="module")
+def db():
+    return run_install(CLI2, quick=True)
+
+
+def make(arch, db, budget_frac, key, *, granular=False, batch=2,
+         context=64, tiers=(8,)):
+    """Schedule over a SINGLE small tier so both prefill modes chunk the
+    prompt identically (the bit-identity comparisons are then exact) and a
+    13-token prompt yields multiple chunks plus an odd tail."""
+    cfg = get_smoke_config(arch)
+    from repro.models import build_model
+    params = build_model(cfg).init(key)
+    subs = build_graph(cfg, wdtype=2, expert_granular=granular)
+    est = TimingEstimator(db, CLI2)
+    budget = int(sum(s.weight_bytes for s in subs) * budget_frac) + 1
+    sched = build_schedule(budget, subs, est,
+                           InferenceSetting(batch=batch, context=context),
+                           tiers=tiers)
+    return cfg, params, sched
+
+
+# ------------------------------------------------------------ bit-identity
+@pytest.mark.parametrize("arch,granular", [("yi-9b", False),
+                                           ("qwen30b-a3b", False),
+                                           ("qwen30b-a3b", True)])
+@pytest.mark.parametrize("overlap", [True, False])
+def test_layer_major_bit_identical_to_chunk_major(arch, granular, overlap,
+                                                  db, key):
+    """Loop order changes WHEN weights move, never the numerics: with a
+    13-token prompt over 4-token-per-sequence chunks (odd 1-token padded
+    tail) the layer-major logits, KV cache and decoded tokens must equal
+    the chunk-major baseline bit for bit."""
+    cfg, params, sched = make(arch, db, 0.2, key, granular=granular)
+    tokens = jax.random.randint(key, (2, 13), 0, cfg.vocab)
+    ex_lm = PipelinedExecutor(cfg, params, sched, max_seq=64,
+                              overlap=overlap, prefill_mode="layer_major")
+    ex_cm = PipelinedExecutor(cfg, params, sched, max_seq=64,
+                              overlap=overlap, prefill_mode="chunk_major")
+    last_lm, kv_lm, pos = ex_lm.prefill(tokens)
+    last_cm, kv_cm, _ = ex_cm.prefill(tokens)
+    assert np.array_equal(np.asarray(last_lm), np.asarray(last_cm))
+    assert np.array_equal(np.asarray(kv_lm["k"]), np.asarray(kv_cm["k"]))
+    assert np.array_equal(np.asarray(kv_lm["v"]), np.asarray(kv_cm["v"]))
+    start = jnp.argmax(last_lm, -1).astype(jnp.int32)
+    gen_lm, _ = ex_lm.decode(start, kv_lm, pos, steps=4)
+    gen_cm, _ = ex_cm.decode(start, kv_cm, pos, steps=4)
+    assert np.array_equal(gen_lm, gen_cm)
+    # the padded tail's garbage positions never landed in the cache
+    assert not np.asarray(kv_lm["k"])[:, :, :, 13:, :].any()
+
+
+def test_per_call_mode_override_matches(db, key):
+    """prefill(prefill_mode=...) overrides the executor default per call,
+    on the same executor instance, with identical results."""
+    cfg, params, sched = make("yi-9b", db, 0.2, key)
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=64)
+    assert ex.prefill_mode == "layer_major"
+    tokens = jax.random.randint(key, (2, 13), 0, cfg.vocab)
+    last_lm, kv_lm, _ = ex.prefill(tokens)
+    last_cm, kv_cm, _ = ex.prefill(tokens, prefill_mode="chunk_major")
+    assert np.array_equal(np.asarray(last_lm), np.asarray(last_cm))
+    assert np.array_equal(np.asarray(kv_lm["k"]), np.asarray(kv_cm["k"]))
+    modes = [p["mode"] for p in ex.stats.prefill_stats]
+    assert modes == ["layer_major", "chunk_major"]
+    # a typo'd override raises instead of silently running chunk-major
+    with pytest.raises(ValueError, match="unknown prefill_mode"):
+        ex.prefill(tokens, prefill_mode="layer-major")
+
+
+# ------------------------------------------------------------ byte scaling
+def test_streamed_bytes_once_per_prompt_dense(db, key):
+    """The acceptance criterion, dense: a C-chunk layer-major prefill
+    streams EXACTLY the tier plan's streamed bytes once; the chunk-major
+    baseline pays them C times."""
+    cfg, params, sched = make("yi-9b", db, 0.1, key)
+    tokens = jax.random.randint(key, (2, 13), 0, cfg.vocab)
+
+    ex_lm = PipelinedExecutor(cfg, params, sched, max_seq=64)
+    ex_lm.prefill(tokens)
+    lm = ex_lm.stats.prefill_stats[0]
+    tier_lm = ex_lm.stats.tiers_used[0]
+    plan_bytes = sum(
+        p.sub.weight_bytes
+        for p in sched.tiers[tier_lm].plan.stream_order()
+        if p.sub.name not in ex_lm._pinned_names)
+    assert plan_bytes > 0, "fixture bug: nothing streamed at this budget"
+    assert lm["passes"] == 1
+    assert lm["chunks"] == 4                      # ceil(13 / (8 // 2))
+    assert lm["streamed_bytes"] == plan_bytes     # 1x, exactly
+
+    ex_cm = PipelinedExecutor(cfg, params, sched, max_seq=64,
+                              prefill_mode="chunk_major")
+    ex_cm.prefill(tokens)
+    cm = ex_cm.stats.prefill_stats[0]
+    expected_cm = sum(
+        p.sub.weight_bytes
+        for t in ex_cm.stats.tiers_used
+        for p in sched.tiers[t].plan.stream_order()
+        if p.sub.name not in ex_cm._pinned_names)
+    assert cm["passes"] == cm["chunks"] == 4
+    assert cm["streamed_bytes"] == expected_cm == 4 * plan_bytes
+
+
+def test_streamed_plus_demanded_bytes_bounded_by_plan_moe(db, key):
+    """Expert-granular MoE: per-prefill streamed+demanded bytes are
+    <= 1x the tier plan's streamed bytes (static shards once, each cold
+    expert at most once — the union across chunks), while chunk-major
+    re-streams statics per chunk AND re-demands experts per chunk."""
+    cfg, params, sched = make("qwen30b-a3b", db, 0.1, key, granular=True)
+    tokens = jax.random.randint(key, (2, 13), 0, cfg.vocab)
+
+    ex_lm = PipelinedExecutor(cfg, params, sched, max_seq=64)
+    ex_lm.prefill(tokens)
+    lm = ex_lm.stats.prefill_stats[0]
+    tier_lm = ex_lm.stats.tiers_used[0]
+    plan = sched.tiers[tier_lm].plan
+    static_bytes = sum(
+        p.sub.weight_bytes for p in plan.static_stream_order()
+        if p.sub.name not in ex_lm._pinned_names)
+    assert lm["passes"] == 1
+    assert lm["demanded_expert_bytes"] > 0
+    # executor invariant: streamed == static plan + demanded experts
+    assert lm["streamed_bytes"] == \
+        static_bytes + lm["demanded_expert_bytes"]
+    # 1x bound: never more than the plan's full streamed set (the worst
+    # case where every cold expert is demanded — once each)
+    assert lm["streamed_bytes"] <= sum(
+        p.sub.weight_bytes for p in plan.stream_order()
+        if p.sub.name not in ex_lm._pinned_names)
+
+    ex_cm = PipelinedExecutor(cfg, params, sched, max_seq=64,
+                              prefill_mode="chunk_major")
+    ex_cm.prefill(tokens)
+    cm = ex_cm.stats.prefill_stats[0]
+    assert cm["passes"] == 4
+    # chunk-major re-pays the static set per chunk
+    assert cm["streamed_bytes"] >= 4 * static_bytes
+    assert cm["streamed_bytes"] > lm["streamed_bytes"]
+
+
+# ------------------------------------------------------------ compile reuse
+def test_no_retrace_across_chunk_counts_and_tails(db, key):
+    """One executable serves every chunk count and tail size: after the
+    first prefill warms the shapes, prompts with more chunks, odd padded
+    tails or fewer chunks trace nothing new — and the prefill head reuses
+    the decode head executable (final-position-only logits)."""
+    cfg, params, sched = make("yi-9b", db, 0.3, key, batch=1)
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=64)
+    for T in (16, 13, 5, 29):
+        tokens = jax.random.randint(key, (1, T), 0, cfg.vocab)
+        last, kv, pos = ex.prefill(tokens)
+        if T == 16:
+            ex.decode(jnp.argmax(last, -1).astype(jnp.int32), kv, pos,
+                      steps=1)
+            traces = dict(ex.engine.trace_counts)
+    assert dict(ex.engine.trace_counts) == traces, \
+        "layer-major prefill re-traced across chunk counts/tails"
+    assert ex.engine.trace_counts["head"] == 1, \
+        "prefill head did not share the decode head executable"
+    assert ex.engine.trace_counts["attn_prefill"] == 1
+
+
+def test_moe_granular_no_retrace_across_tails(db, key):
+    cfg, params, sched = make("qwen30b-a3b", db, 0.3, key, granular=True,
+                              batch=1)
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=64)
+    for T in (16, 13):
+        tokens = jax.random.randint(key, (1, T), 0, cfg.vocab)
+        ex.prefill(tokens)
+        if T == 16:
+            traces = dict(ex.engine.trace_counts)
+    assert dict(ex.engine.trace_counts) == traces
+    assert ex.engine.trace_counts["moe_route_prefill"] == 1
+
+
+def test_truncating_capacity_regime_stays_bit_identical(db, key,
+                                                        monkeypatch):
+    """When an MoE chunk sits in ``capacity_of``'s truncating regime,
+    padding the tail would grow the capacity and could keep assignments
+    the unpadded baseline drops — so layer-major must fall back to an
+    unpadded tail and stay bit-identical. Shrink the dropless bound so
+    the smoke-scale chunks (B*chunk=8 tokens, top_k=2) truncate."""
+    import repro.models.mlp as mlp_mod
+    monkeypatch.setattr(mlp_mod, "DROPLESS_MAX_ASSIGN", 8)
+    cfg, params, sched = make("qwen30b-a3b", db, 0.2, key, granular=True)
+    assert not mlp_mod.capacity_is_dropless(2 * 4, cfg.moe)
+    tokens = jax.random.randint(key, (2, 13), 0, cfg.vocab)
+    ex_lm = PipelinedExecutor(cfg, params, sched, max_seq=64)
+    ex_cm = PipelinedExecutor(cfg, params, sched, max_seq=64,
+                              prefill_mode="chunk_major")
+    last_lm, kv_lm, pos = ex_lm.prefill(tokens)
+    last_cm, kv_cm, _ = ex_cm.prefill(tokens)
+    assert np.array_equal(np.asarray(last_lm), np.asarray(last_cm))
+    assert np.array_equal(np.asarray(kv_lm["k"]), np.asarray(kv_cm["k"]))
+    # the fallback really engaged: the 1-token natural tail compiled its
+    # own attention executable alongside the full-chunk one
+    assert ex_lm.engine.trace_counts["attn_prefill"] == 2
+
+
+def test_session_estimates_follow_prefill_mode(db):
+    """A chunk-major session must not advertise the layer-major 1x-stream
+    TTFT (review fix): its estimate uses the Cx-transfer model."""
+    cfg = get_smoke_config("yi-9b")
+    total = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+    kw = dict(setting=InferenceSetting(batch=1, context=64),
+              db=db, max_seq=64, tiers=(8,))
+    s_lm = Session.open(cfg, CLI2, int(total * 0.1) + 1, **kw)
+    s_cm = Session.open(cfg, CLI2, int(total * 0.1) + 1,
+                        prefill_mode="chunk_major", **kw)
+    s_eager = Session.open(cfg, CLI2, int(total * 0.1) + 1,
+                           jit_engine=False, **kw)
+    assert s_lm.effective_prefill_mode == "layer_major"
+    assert s_cm.effective_prefill_mode == "chunk_major"
+    assert s_eager.effective_prefill_mode == "chunk_major"
+    isl = 64
+    assert s_lm.estimates(isl)["ttft_s"] < s_cm.estimates(isl)["ttft_s"]
+    assert s_cm.estimates(isl)["ttft_s"] == s_eager.estimates(isl)["ttft_s"]
+
+
+# ------------------------------------------------------------ contracts
+def test_tier_smaller_than_batch_raises(db, key):
+    """Satellite: a tier that cannot give each sequence one token per
+    chunk raises a clear error instead of silently clamping to 1-token
+    chunks."""
+    cfg, params, sched = make("yi-9b", db, 0.5, key, tiers=(1,))
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=64)
+    tokens = jax.random.randint(key, (2, 8), 0, cfg.vocab)
+    with pytest.raises(ValueError, match="tier"):
+        ex.prefill(tokens)
+
+
+def test_batcher_prefill_mode_conflict_raises(db, key):
+    """A session-backed batcher must not silently ignore a conflicting
+    prefill_mode (review fix; same contract as max_batch/fused)."""
+    from repro.core.serving import ContinuousBatcher
+    cfg = get_smoke_config("yi-9b")
+    total = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+    s = Session.open(cfg, CLI2, int(total * 0.5) + 1,
+                     InferenceSetting(batch=1, context=64), db=db,
+                     max_seq=64)
+    with pytest.raises(ValueError, match="prefill_mode"):
+        ContinuousBatcher(cfg, None, executor=s.executor, session=s,
+                          prefill_mode="chunk_major")
+    # matching explicit value is fine
+    b = ContinuousBatcher(cfg, None, executor=s.executor, session=s,
+                          prefill_mode="layer_major")
+    assert b.ex.prefill_mode == "layer_major"
+
+
+def test_layer_major_requires_jit_engine(db, key):
+    cfg, params, sched = make("yi-9b", db, 0.5, key)
+    with pytest.raises(ValueError, match="jit_engine"):
+        PipelinedExecutor(cfg, params, sched, max_seq=64, jit_engine=False,
+                          prefill_mode="layer_major")
+    with pytest.raises(ValueError, match="jit_engine"):
+        Session.open(cfg, CLI2, 1 << 20, InferenceSetting(batch=1), db=db,
+                     jit_engine=False, prefill_mode="layer_major")
+    # defaults: layer-major on the jitted engine, chunk-major on eager
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=64,
+                           jit_engine=False)
+    assert ex.prefill_mode == "chunk_major"
+    tokens = jax.random.randint(key, (1, 6), 0, cfg.vocab)
+    ex.prefill(tokens)                            # eager baseline still runs
+    assert ex.stats.prefill_stats[0]["mode"] == "chunk_major"
+
+
+# ------------------------------------------------------------ stats surface
+def test_session_surfaces_prefill_stats(db):
+    cfg = get_smoke_config("yi-9b")
+    total = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+    s = Session.open(cfg, CLI2, int(total * 0.3) + 1,
+                     InferenceSetting(batch=2, context=64), db=db,
+                     max_seq=64, tiers=(8,))
+    prompts = np.random.RandomState(0).randint(0, cfg.vocab, (2, 13))
+    s.generate(prompts, max_new_tokens=2)
+    ex = s.stats()["executor"]
+    assert ex["prefills"] == 1 and ex["prefill_passes"] == 1
+    entry = ex["prefill_stats"][0]
+    assert entry["mode"] == "layer_major" and entry["chunks"] == 4
+    # realised activation ring: all 4 chunks' residuals (padded prompt)
+    assert entry["act_ring_bytes"] == 2 * 16 * cfg.d_model * 2
+    assert ex["prefill_streamed_bytes_per_prompt"] == \
+        entry["streamed_bytes"] > 0
+    assert entry["copy_s_hidden"] + entry["copy_s_exposed"] > 0
+    assert ex["prefill_copy_s_hidden"] == entry["copy_s_hidden"]
+
+
+def test_batcher_prefill_passes_once_per_prompt(db):
+    """Serving admissions run one weight-stationary pass per prompt, and
+    the batcher surfaces the per-prompt streamed bytes."""
+    cfg = get_smoke_config("yi-9b")
+    total = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+    s = Session.open(cfg, CLI2, int(total * 0.3) + 1,
+                     InferenceSetting(batch=2, context=64), db=db,
+                     max_seq=64, tiers=(8,))
+    from repro.core.serving import Request
+    rng = np.random.RandomState(0)
+    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=9 + 4 * i)
+                    .astype(np.int32), max_new_tokens=3) for i in range(3)]
+    s.serve(reqs, max_batch=2)
+    assert all(r.done for r in reqs)
+    st = s.batcher().stats()
+    assert st["prefill_passes"] == len(reqs)
+    assert st["mean_prefill_streamed_bytes"] > 0
+
+
+# ------------------------------------------------------------ cost model
+def test_estimate_ttft_tracks_1x_streaming(db, key):
+    """Planner satellite: the layer-major TTFT model amortises the
+    streamed plan bytes across the prompt — strictly below the
+    chunk-major model (which pays them per chunk) whenever the prompt
+    spans multiple chunks of a streaming plan, and its transfer term stops
+    growing with prompt length."""
+    _, _, sched = make("yi-9b", db, 0.1, key)
+    (tier,) = sched.tiers
+    entry = sched.tiers[tier]
+    assert entry.plan.streamed_weight_bytes() > 0
+    assert 0 < entry.prefill_chunk_s < entry.est_time
+    isl = 16 * tier
+    lm = estimate_ttft(sched, isl)
+    cm = estimate_ttft(sched, isl, mode="chunk_major")
+    assert lm < cm
+    # chunk-major transfer grows linearly with prompt length; layer-major
+    # re-pays only the per-chunk compute
+    lm2, cm2 = estimate_ttft(sched, 2 * isl), \
+        estimate_ttft(sched, 2 * isl, mode="chunk_major")
+    assert cm2 == pytest.approx(2 * cm)
+    assert lm2 - lm <= cm2 - cm
+    assert lm2 <= 2 * lm
+
+
+def test_pick_prefill_tier_respects_min_tier(db, key):
+    _, _, sched = make("yi-9b", db, 0.1, key, tiers=(4, 16, 64))
+    for mt in (1, 5, 17):
+        t = sched.pick_prefill_tier(64, min_tier=mt)
+        assert t in sched.tiers and t >= mt
+    # all tiers below the floor: fall back to the largest
+    assert sched.pick_prefill_tier(64, min_tier=100) == 64
