@@ -1,0 +1,164 @@
+"""Quantised weight streaming benchmark (DESIGN.md §11): per-step streamed
+MB, decode TPS and TTFT at ``weight_quant`` = fp16 / int8 / int4 on a
+streamed-FFN dense config.
+
+The paper's argument (and PIPO's, arXiv:2504.03664): on a VRAM-constrained
+client the decode loop is link-bound, so packing streamed weights is a
+direct TPS multiplier. This bench pins attention + KV and streams every
+dense FFN through the scratch double-buffer, so the per-step streamed bytes
+ARE the FFN wire format:
+
+- hard-asserts int4 streams ~half of int8 (1.9x-2.1x) and >= 3.8x less
+  than fp16 per step;
+- hard-asserts the executor's ``streamed_bytes == plan`` invariant at the
+  quantised byte counts, per decode step;
+- hard-asserts ``weight_quant="fp16"`` is bit-identical to the default
+  config (same tokens, same prefill logits).
+
+The placement is forced to the gpu-only fundamental plan: quantisation
+shrinks stream time, which can legitimately flip the planner's choice
+toward CPU placements — this bench isolates the wire-format effect, so all
+three modes must stream the same shards.
+
+    PYTHONPATH=src python -m benchmarks.run quant_stream
+
+``REPRO_BENCH_SMOKE=1`` shrinks the decode loop to a CI-sized smoke run.
+"""
+from __future__ import annotations
+
+import os
+
+# fp16 bit-identity is asserted across runs: pin per-op bf16 rounding
+# exactly as tests/conftest.py does (see the comment there)
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_allow_excess_precision" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_allow_excess_precision=false").strip()
+
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from benchmarks.common import get_db, write_csv  # noqa: E402
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core import (CLI2, InferenceSetting, PipelinedExecutor,  # noqa: E402
+                        TimingEstimator, build_graph, build_schedule)
+from repro.core.planner import (decide_scratch_budget,  # noqa: E402
+                                estimate_ttft, plan_gpu_only)
+from repro.models import build_model  # noqa: E402
+
+# the stock smoke config (d=64) is too small for the packed format to win:
+# per-group scale/zero metadata would eat the 4-bit savings. This derived
+# config keeps the smoke layer count but widens the FFN to realistic
+# metadata ratios (d=256, f=512 -> int4 is 3.82x under fp16 wire bytes).
+BASE = get_smoke_config("yi-9b").replace(
+    name="yi-9b-quantstream", d_model=256, n_heads=4, n_kv_heads=2,
+    head_dim=64, d_ff=512)
+TIER = 8
+# must stay below every streamable FFN shard AND the embed/out tables, so
+# the pin set is exactly {attn, kv} at every quant mode
+BUDGET_SLACK = 100_000
+
+
+def _schedule(cfg, db, setting):
+    """Streamed-FFN schedule, identical placement shape at every mode:
+    budget = scratch + all attention weights + slack, plan forced gpu-only
+    (attn/kv pinned, every FFN streamed through the scratch buffer)."""
+    subs = build_graph(cfg, wdtype=2)
+    est = TimingEstimator(db, CLI2)
+    want = decide_scratch_budget(1 << 60, subs, setting, TIER)
+    attn_total = sum(s.weight_bytes for s in subs if s.kind == "attn")
+    budget = want + attn_total + BUDGET_SLACK
+    sched = build_schedule(budget, subs, est, setting, tiers=(TIER,))
+    entry = sched.tiers[TIER]
+    pinned = {p.sub.name for p in entry.plan.placements
+              if p.residency == "vram" and not p.streamed}
+    assert all(s.name in pinned for s in subs if s.kind == "attn"), \
+        "fixture bug: attention not fully pinned"
+    assert not any(s.name in pinned for s in subs if s.kind == "ffn"), \
+        "fixture bug: an FFN was pinned — nothing left to stream"
+    plan = plan_gpu_only(subs, pinned)
+    plan.est_time = est.plan_time(plan, TIER, setting)
+    entry.plan = plan
+    entry.est_time = plan.est_time
+    entry.prefill_chunk_s = est.plan_time(plan, TIER, setting,
+                                          include_streamed_weights=False)
+    return sched
+
+
+def _run(cfg, db, setting, prompt, steps):
+    sched = _schedule(cfg, db, setting)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=setting.context)
+    ex.prefill(prompt)                          # warm compiles off-clock
+    t0 = time.perf_counter()
+    last, kv, pos = ex.prefill(prompt)
+    ttft = time.perf_counter() - t0
+    logits = np.asarray(last, np.float32)
+    start = jnp.argmax(last, -1).astype(jnp.int32)
+    gen, kv = ex.decode(start, kv, pos, steps=1)  # warm decode shape
+    b0 = ex.stats.streamed_bytes
+    t0 = time.perf_counter()
+    gen2, kv = ex.decode(jnp.asarray(gen[:, -1:]), kv, pos + 1, steps=steps)
+    dt = time.perf_counter() - t0
+    per_step = (ex.stats.streamed_bytes - b0) / steps
+    plan = sched.tiers[TIER].plan
+    # executor invariant at the quantised byte counts: every decode step
+    # streams exactly the plan's per-pass bytes
+    assert per_step == plan.streamed_weight_bytes(), \
+        (per_step, plan.streamed_weight_bytes())
+    by_dtype = dict(ex.stats.streamed_bytes_by_dtype)
+    tokens = np.concatenate([np.asarray(gen), np.asarray(gen2)], axis=1)
+    return {"ttft_s": ttft, "tps": steps / max(dt, 1e-12),
+            "per_step": per_step, "by_dtype": by_dtype, "tokens": tokens,
+            "logits": logits, "est_ttft_s": estimate_ttft(sched, 16),
+            "plan_by_dtype": plan.streamed_weight_bytes_by_dtype()}
+
+
+def run():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    steps = 8 if smoke else 32
+    setting = InferenceSetting(batch=1, context=64)
+    db = get_db("cli2")
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (1, 16), 0,
+                                BASE.vocab)
+
+    rows, res = [], {}
+    for mode in ("fp16", "int8", "int4"):
+        r = _run(BASE.replace(weight_quant=mode), db, setting, prompt, steps)
+        res[mode] = r
+        assert list(r["by_dtype"]) == [mode], r["by_dtype"]
+        assert list(r["plan_by_dtype"]) == [mode], r["plan_by_dtype"]
+        rows.append([mode, f"{r['per_step'] / 1e6:.6f}", f"{r['tps']:.2f}",
+                     f"{r['ttft_s'] * 1e3:.2f}",
+                     f"{r['est_ttft_s'] * 1e3:.3f}"])
+        print(f"quant_stream,{mode},streamed_mb_step,"
+              f"{r['per_step'] / 1e6:.6f},decode_tps,{r['tps']:.2f},"
+              f"ttft_ms,{r['ttft_s'] * 1e3:.2f}")
+
+    # fp16 is the identity: bit-identical to the default config end to end
+    base = _run(BASE, db, setting, prompt, steps)
+    assert np.array_equal(base["logits"], res["fp16"]["logits"]), \
+        "weight_quant='fp16' changed the prefill logits"
+    assert np.array_equal(base["tokens"], res["fp16"]["tokens"]), \
+        "weight_quant='fp16' changed the greedy tokens"
+
+    # acceptance: int4 ~halves int8 and >= 3.8x under fp16 per decode step
+    r84 = res["int8"]["per_step"] / res["int4"]["per_step"]
+    rf4 = res["fp16"]["per_step"] / res["int4"]["per_step"]
+    assert 1.9 <= r84 <= 2.1, f"int8/int4 streamed ratio {r84:.3f}"
+    assert rf4 >= 3.8, f"fp16/int4 streamed ratio {rf4:.3f}"
+    print(f"quant_stream,ratios,int8_over_int4,{r84:.3f},"
+          f"fp16_over_int4,{rf4:.3f}")
+
+    path = write_csv("bench_quant_stream.csv", rows,
+                     ["weight_quant", "streamed_mb_step", "decode_tps",
+                      "ttft_ms", "est_ttft_ms"])
+    print(f"quant_stream,csv,{path}")
+
+
+if __name__ == "__main__":
+    run()

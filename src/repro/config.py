@@ -54,8 +54,26 @@ class ModelConfig:
     # beyond-paper serving mode: experts stored int8 + per-expert scales
     # (halves the dominant HBM term of MoE decode; EXPERIMENTS.md §Perf C2)
     expert_quant: str = "none"  # none | int8
+    # streamed-weight quantisation for ALL streamable shard kinds (dense FFN
+    # and MoE experts): grouped int8 or packed int4 with per-group scales /
+    # zero-points, dequant fused into the streamed matmul (DESIGN.md §11).
+    # "fp16" keeps weights at the compute dtype — bit-exact baseline.
+    weight_quant: str = "fp16"  # fp16 | int8 | int4
     # citation tag from the assignment card
     source: str = ""
+
+    def __post_init__(self):
+        if self.weight_quant not in ("fp16", "int8", "int4"):
+            raise ValueError(
+                f"weight_quant must be fp16 | int8 | int4, "
+                f"got {self.weight_quant!r}")
+        if self.expert_quant not in ("none", "int8"):
+            raise ValueError(
+                f"expert_quant must be none | int8, got {self.expert_quant!r}")
+        if self.weight_quant != "fp16" and self.expert_quant != "none":
+            raise ValueError(
+                "weight_quant already covers expert shards; combining it "
+                "with expert_quant is ambiguous — pick one")
 
     @property
     def resolved_head_dim(self) -> int:

@@ -3,7 +3,7 @@ from repro.core.costmodel import Placement, Plan, TimingEstimator  # noqa: F401
 from repro.core.engine import SubLayerEngine  # noqa: F401
 from repro.core.executor import ExecStats, PipelinedExecutor  # noqa: F401
 from repro.core.graphing import (  # noqa: F401
-    ShardDiv, build_graph, expert_weight_bytes)
+    ShardDiv, build_graph, expert_weight_bytes, ffn_weight_bytes)
 from repro.core.install import run_install  # noqa: F401
 from repro.core.planner import (  # noqa: F401
     PINNED_COMPUTE_KINDS, TIERS, Schedule, ScheduleDiff, build_schedule,

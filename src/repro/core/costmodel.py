@@ -74,6 +74,16 @@ class Plan:
         ``static_stream_order`` bytes plus the demanded experts only."""
         return sum(p.sub.weight_bytes for p in self.stream_order())
 
+    def streamed_weight_bytes_by_dtype(self) -> dict:
+        """``streamed_weight_bytes`` split by each shard's storage format
+        (``meta["quant"]``: fp16 / int8 / int4) — the plan-side counterpart
+        of ``ExecStats.streamed_bytes_by_dtype`` (DESIGN.md §11)."""
+        out: dict = {}
+        for p in self.stream_order():
+            q = p.sub.meta.get("quant", "fp16")
+            out[q] = out.get(q, 0) + p.sub.weight_bytes
+        return out
+
 
 class TimingEstimator:
     def __init__(self, db: ProfileDB, system: SystemConfig,

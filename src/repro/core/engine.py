@@ -33,14 +33,15 @@ would run the kernel interpreter per matmul, so it must be opted into with
 """
 from __future__ import annotations
 
-import functools
 import os
 from collections import Counter
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.streamed_matmul import streamed_matmul
+from repro.kernels.streamed_matmul import (streamed_matmul,
+                                           streamed_matmul_int4,
+                                           streamed_matmul_int8)
 from repro.models import attention as attn_mod
 from repro.models import mlp as mlp_mod
 from repro.models.common import NoPolicy, rmsnorm
@@ -297,23 +298,55 @@ class SubLayerEngine:
         if not self.use_streamed_mm:
             return False
         B, T, d = xshape
-        f = p["w_up"].shape[1]
+        quant = p["w_up"].dtype in (jnp.int8, jnp.uint8)
+        f = p["s_up"].shape[-1] if quant else p["w_up"].shape[1]
         m = B * T
-        return all(_blocks_divide(dim, blk)
-                   for dim, blk in ((m, 128), (d, 512), (f, 128), (f, 512),
-                                    (d, 128)))
+        if not all(_blocks_divide(dim, blk)
+                   for dim, blk in ((m, 128), (f, 128), (d, 128))):
+            return False
+        if not quant:
+            return all(_blocks_divide(dim, blk)
+                       for dim, blk in ((d, 512), (f, 512)))
+        # fused-dequant kernels need each matrix's balanced quant groups to
+        # tile its K dim exactly (and int4 groups to be even); otherwise
+        # fall back to the jnp dequant path in models/mlp.py
+        for name in ("w_gate", "w_up", "w_down"):
+            if name not in p:
+                continue
+            K = f if name == "w_down" else d
+            G = p[f"s{name[1:]}"].shape[0]
+            g = -(-K // G)
+            if g * G != K or (p[name].dtype == jnp.uint8 and g % 2):
+                return False
+        return True
+
+    def _mm_dispatch(self, x2, p, name):
+        """One matmul through the Pallas streamed kernel matching the
+        weight's storage format — dequant fused into the k-loop for the
+        quantised formats (DESIGN.md §11)."""
+        w = p[name]
+        if w.dtype == jnp.uint8:  # packed int4
+            return streamed_matmul_int4(x2, w, p[f"s{name[1:]}"],
+                                        p[f"z{name[1:]}"],
+                                        interpret=self._mm_interpret)
+        if w.dtype == jnp.int8:   # grouped int8
+            s = p[f"s{name[1:]}"]
+            block_k = -(-x2.shape[1] // s.shape[0])
+            return streamed_matmul_int8(x2, w, s, block_k=block_k,
+                                        interpret=self._mm_interpret)
+        return streamed_matmul(x2, w, interpret=self._mm_interpret)
 
     def _ffn_streamed(self, p, h):
         """Dense FFN with all matmuls through the Pallas streamed kernel."""
         B, T, d = h.shape
         x2 = h.reshape(B * T, d)
-        mm = functools.partial(streamed_matmul, interpret=self._mm_interpret)
+        mm = self._mm_dispatch
         if self.cfg.mlp == "swiglu":
-            hh = jax.nn.silu(mm(x2, p["w_gate"])) * mm(x2, p["w_up"])
+            hh = jax.nn.silu(mm(x2, p, "w_gate")) * mm(x2, p, "w_up")
         else:
-            hh = jax.nn.gelu(mm(x2, p["w_up"]))
+            hh = jax.nn.gelu(mm(x2, p, "w_up"))
         hh = self.policy.constrain(hh.reshape(B, T, -1), "ffn_hidden")
-        out = mm(hh.reshape(B * T, -1), p["w_down"])
+        out = mm(hh.reshape(B * T, -1), p, "w_down")
         return out.reshape(B, T, d)
 
     # ------------------------------------------------------------ ends

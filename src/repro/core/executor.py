@@ -41,6 +41,9 @@ from repro.models.common import NoPolicy, greedy_token, rmsnorm
 @dataclass
 class ExecStats:
     streamed_bytes: int = 0      # plan-accounted streamed weight bytes
+    # same bytes split by the shard's storage format ("fp16"/"int8"/"int4",
+    # from SubLayer.meta["quant"]) — the DESIGN.md §11 repricing surface
+    streamed_bytes_by_dtype: dict = field(default_factory=dict)
     at_use_bytes: int = 0        # non-streamed (CPU-engine) at-use fetches
     staged_bytes: int = 0        # actual host->device bytes moved
     copy_s_hidden: float = 0.0   # streamed copy time hidden under compute
@@ -234,9 +237,20 @@ class PipelinedExecutor:
                 "evicted_bytes": evicted_bytes, "seconds": dt}
 
     # ------------------------------------------------------------ weights
-    # weight-matrix keys of one expert's stack (+ scales when int8-quantised)
+    # weight-matrix keys of one expert's stack (+ scales / int4 zero-points
+    # when quantised)
     _EXPERT_KEYS = ("w_gate", "w_up", "w_down")
     _SCALE_KEYS = ("s_gate", "s_up", "s_down")
+    _ZERO_KEYS = ("z_gate", "z_up", "z_down")
+
+    def _account_streamed(self, placement):
+        """Single accounting point for plan-priced streamed bytes, bucketed
+        by the shard's storage format (DESIGN.md §11)."""
+        wb = placement.sub.weight_bytes
+        q = placement.sub.meta.get("quant", "fp16")
+        self.stats.streamed_bytes += wb
+        self.stats.streamed_bytes_by_dtype[q] = \
+            self.stats.streamed_bytes_by_dtype.get(q, 0) + wb
 
     def _subtree(self, sub):
         lp = self.layer_params[sub.layer]
@@ -250,7 +264,8 @@ class PipelinedExecutor:
         if sub.kind == "moe_expert":
             e = sub.meta["expert"]
             moe = lp["moe"]
-            keys = [k for k in self._EXPERT_KEYS + self._SCALE_KEYS
+            keys = [k for k in
+                    self._EXPERT_KEYS + self._SCALE_KEYS + self._ZERO_KEYS
                     if k in moe]
             return {k: moe[k][e] for k in keys}
         raise ValueError(sub.kind)
@@ -266,7 +281,7 @@ class PipelinedExecutor:
         dt = time.perf_counter() - t0
         self._sync_staged += nbytes
         if placement.streamed and placement.engine == "gpu":
-            self.stats.streamed_bytes += placement.sub.weight_bytes
+            self._account_streamed(placement)
             self._sync_exposed += dt
         else:
             self.stats.at_use_bytes += nbytes
@@ -278,7 +293,7 @@ class PipelinedExecutor:
         if name in self._pinned_names:
             return self._pinned[name], False
         if name in streaming:
-            self.stats.streamed_bytes += placement.sub.weight_bytes
+            self._account_streamed(placement)
             return self.prefetch.acquire(name), True
         return self._fetch_sync(placement), False
 
@@ -339,7 +354,9 @@ class PipelinedExecutor:
 
     def _expert_keys(self, layer):
         moe = self.layer_params[layer]["moe"]
-        return [k for k in self._EXPERT_KEYS + self._SCALE_KEYS if k in moe]
+        return [k for k in
+                self._EXPERT_KEYS + self._SCALE_KEYS + self._ZERO_KEYS
+                if k in moe]
 
     def _pinned_expert_stack(self, layer):
         """(stacked weights, membership mask) of the experts currently
@@ -458,7 +475,7 @@ class PipelinedExecutor:
             self.stats.engine_calls[pl.engine] += 1
             if name in requested:
                 tree = self.prefetch.acquire(name)
-                self.stats.streamed_bytes += pl.sub.weight_bytes
+                self._account_streamed(pl)
                 self.stats.demanded_expert_bytes += pl.sub.weight_bytes
                 rel = True
             else:

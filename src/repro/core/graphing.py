@@ -18,6 +18,7 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.config import ModelConfig
 from repro.core.sublayer import SubLayer
+from repro.kernels.streamed_matmul import GROUP_SIZE
 
 
 @dataclass(frozen=True)
@@ -28,16 +29,48 @@ class ShardDiv:
     out: int = 1
 
 
+def _grouped_bytes(K: int, N: int, quant: str, group: int = GROUP_SIZE) -> int:
+    """Exact on-the-wire bytes of one (K, N) matrix under ``weight_quant``:
+    payload plus per-group metadata, mirroring kernels/streamed_matmul.py
+    (G = ceil(K / group) balanced groups; int8 carries fp32 scales, int4
+    packs two codes per byte with fp16 scales + uint8 zero-points)."""
+    G = -(-K // group)
+    if quant == "int8":
+        return K * N + G * N * 4
+    if quant == "int4":
+        return (K // 2) * N + G * N * 2 + G * N
+    raise ValueError(quant)
+
+
+def ffn_weight_bytes(cfg: ModelConfig, wdtype):
+    """Bytes of ONE dense FFN's weight stack as the executor moves it.
+    fp16 keeps the seed's ``n_mat * d * f * wdtype`` (float-preserving for
+    the benchmarks' fractional wdtypes); quantised modes price the
+    ``n_mat - 1`` up-projections (d, f) and the (f, d) down-projection at
+    their packed size + scale/zero metadata (DESIGN.md §11)."""
+    d, f = cfg.d_model, cfg.d_ff
+    n_mat = 3 if cfg.mlp == "swiglu" else 2
+    if cfg.weight_quant == "fp16":
+        return n_mat * d * f * wdtype
+    return ((n_mat - 1) * _grouped_bytes(d, f, cfg.weight_quant)
+            + _grouped_bytes(f, d, cfg.weight_quant))
+
+
 def expert_weight_bytes(cfg: ModelConfig, wdtype) -> int:
     """Bytes of ONE expert's weight stack as the executor actually moves
     it. ``expert_quant == "int8"`` stores the three (d, f) matrices int8
     plus three (1, 1) fp32 scales (models/mlp.py), so the per-expert
     transfer is ``3*d*f + 12`` bytes — NOT the bf16 ``3*d*f*2`` the seed
-    accounting assumed."""
+    accounting assumed. ``weight_quant`` prices the grouped int8 / packed
+    int4 layout per matrix (DESIGN.md §11)."""
     m = cfg.moe
+    d, f = cfg.d_model, m.d_expert
     if cfg.expert_quant == "int8":
-        return 3 * cfg.d_model * m.d_expert + 3 * 4
-    return int(3 * cfg.d_model * m.d_expert * wdtype)
+        return 3 * d * f + 3 * 4
+    if cfg.weight_quant != "fp16":
+        return (2 * _grouped_bytes(d, f, cfg.weight_quant)
+                + _grouped_bytes(f, d, cfg.weight_quant))
+    return int(3 * d * f * wdtype)
 
 
 def build_graph(cfg: ModelConfig, wdtype: int = 2,
@@ -67,7 +100,9 @@ def build_graph(cfg: ModelConfig, wdtype: int = 2,
             if cfg.moe is not None:
                 m = cfg.moe
                 e_w = expert_weight_bytes(cfg, wdtype) // div.ffn
-                e_wdt = 1 if cfg.expert_quant == "int8" else wdtype
+                e_quant = ("int8" if cfg.expert_quant == "int8"
+                           else cfg.weight_quant)
+                e_wdt = {"int8": 1, "int4": 0.5}.get(e_quant, wdtype)
                 if expert_granular:
                     freqs = (routing or {}).get(layer)
                     subs.append(SubLayer(
@@ -83,19 +118,21 @@ def build_graph(cfg: ModelConfig, wdtype: int = 2,
                             e_w,
                             meta={"d": d, "f": m.d_expert, "E": m.n_experts,
                                   "top_k": m.top_k, "expert": e, "hot": hot,
-                                  "wdtype": e_wdt}))
+                                  "wdtype": e_wdt, "quant": e_quant}))
                 else:
                     subs.append(SubLayer(
                         f"L{layer}/moe", "moe", layer, m.n_experts * e_w,
                         meta={"d": d, "f": m.d_expert,
                               "E": m.n_experts, "top_k": m.top_k,
-                              "wdtype": e_wdt}))
+                              "wdtype": e_wdt, "quant": e_quant}))
             else:
                 n_mat = 3 if cfg.mlp == "swiglu" else 2
-                w = n_mat * d * cfg.d_ff * wdtype // div.ffn
+                f_wdt = {"int8": 1, "int4": 0.5}.get(cfg.weight_quant, wdtype)
+                w = ffn_weight_bytes(cfg, wdtype) // div.ffn
                 subs.append(SubLayer(f"L{layer}/ffn", "ffn", layer, w,
                                      meta={"d": d, "f": cfg.d_ff,
-                                           "n_mat": n_mat, "wdtype": wdtype}))
+                                           "n_mat": n_mat, "wdtype": f_wdt,
+                                           "quant": cfg.weight_quant}))
         else:
             di, n = cfg.d_inner, cfg.ssm_state
             w = (d * (2 * di + 2 * n + cfg.n_ssm_heads) + di * d) * wdtype // div.ffn
@@ -106,8 +143,10 @@ def build_graph(cfg: ModelConfig, wdtype: int = 2,
             if shared_here:
                 # one set of shared weights (counted once); per-application KV
                 nm = 3 if cfg.mlp == "swiglu" else 2
+                f_wdt = {"int8": 1, "int4": 0.5}.get(cfg.weight_quant, wdtype)
                 w_attn = attn_w if first_shared else 0
-                w_ffn = (nm * d * cfg.d_ff * wdtype // div.ffn) if first_shared else 0
+                w_ffn = (ffn_weight_bytes(cfg, wdtype) // div.ffn) \
+                    if first_shared else 0
                 first_shared = False
                 subs.append(SubLayer(f"L{layer}/shared_attn", "attn", layer,
                                      w_attn,
@@ -117,8 +156,8 @@ def build_graph(cfg: ModelConfig, wdtype: int = 2,
                                      kv_bytes_per_token=kv_per_tok))
                 subs.append(SubLayer(
                     f"L{layer}/shared_ffn", "ffn", layer, w_ffn,
-                    meta={"d": d, "f": cfg.d_ff, "n_mat": nm, "wdtype": wdtype,
-                          "shared": True}))
+                    meta={"d": d, "f": cfg.d_ff, "n_mat": nm, "wdtype": f_wdt,
+                          "quant": cfg.weight_quant, "shared": True}))
     heads = max(1, cfg.n_codebooks or 1)
     subs.append(SubLayer("outs/head", "out", cfg.n_layers,
                          heads * d * cfg.vocab * wdtype // max(div.out, 1),

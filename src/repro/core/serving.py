@@ -333,6 +333,8 @@ class ContinuousBatcher:
             "iterations": self.iterations,
             "tiers_used": sorted(set(self.tier_log)),
             "streamed_bytes": self.ex.stats.streamed_bytes,
+            "streamed_bytes_by_dtype":
+                dict(self.ex.stats.streamed_bytes_by_dtype),
             "engine_calls": dict(self.ex.stats.engine_calls),
             # completion stats (satellite: serve() used to build-and-drop a
             # quadratic `done` list; the retire path now records these)

@@ -33,3 +33,9 @@ def streamed_matmul_int8_ref(x, w_q, scales, block_k=512):
     wt = w_q.reshape(K // block_k, block_k, N).astype(jnp.float32)
     w = (wt * scales).reshape(K, N)
     return (x.astype(jnp.float32) @ w).astype(x.dtype)
+
+
+def streamed_matmul_int4_ref(x, w_packed, scales, zeros):
+    from repro.kernels.streamed_matmul import dequant_int4
+    w = dequant_int4(w_packed, scales, zeros)
+    return (x.astype(jnp.float32) @ w).astype(x.dtype)

@@ -18,6 +18,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels.streamed_matmul import (GROUP_SIZE, dequant_int4,
+                                           dequant_int8, quantize_int4,
+                                           quantize_int8)
 from repro.models.common import dense_init
 
 # jax.shard_map graduated from jax.experimental in 0.5; support both
@@ -27,30 +30,58 @@ else:  # pragma: no cover - exercised on jax<0.5 runtimes (e.g. CI 0.4.x)
     from jax.experimental.shard_map import shard_map as _shard_map
 
 
+# ----------------------------------------------------- weight quantisation
+def quantize_weight_tree(p, weight_quant):
+    """Quantise every ``w_*`` matrix in a param dict at install time
+    (DESIGN.md §11). 2-D weights quantise directly; stacked (E, K, N)
+    expert weights quantise per expert via vmap. Adds ``s_*`` scales (and
+    ``z_*`` zero-points for int4) next to each quantised ``w_*``."""
+    if weight_quant == "fp16":
+        return p
+    out = dict(p)
+    for k in list(p):
+        if not k.startswith("w_"):
+            continue
+        w = p[k]
+        fn = {"int8": partial(quantize_int8, block_k=GROUP_SIZE),
+              "int4": quantize_int4}[weight_quant]
+        for _ in range(w.ndim - 2):
+            fn = jax.vmap(fn)
+        qs = fn(w)
+        if weight_quant == "int8":
+            out[k], out[f"s_{k[2:]}"] = qs
+        else:
+            out[k], out[f"s_{k[2:]}"], out[f"z_{k[2:]}"] = qs
+    return out
+
+
 # ---------------------------------------------------------------- dense ffn
 def init_ffn_params(key, cfg, dtype, d_ff=None):
     d = cfg.d_model
     f = d_ff or cfg.d_ff
     ks = jax.random.split(key, 3)
     if cfg.mlp == "swiglu":
-        return {
+        p = {
             "w_gate": dense_init(ks[0], (d, f), 0, dtype),
             "w_up": dense_init(ks[1], (d, f), 0, dtype),
             "w_down": dense_init(ks[2], (f, d), 0, dtype),
         }
-    return {
-        "w_up": dense_init(ks[0], (d, f), 0, dtype),
-        "w_down": dense_init(ks[1], (f, d), 0, dtype),
-    }
+    else:
+        p = {
+            "w_up": dense_init(ks[0], (d, f), 0, dtype),
+            "w_down": dense_init(ks[1], (f, d), 0, dtype),
+        }
+    return quantize_weight_tree(p, cfg.weight_quant)
 
 
 def ffn(params, cfg, x, policy):
     if cfg.mlp == "swiglu":
-        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+        h = jax.nn.silu(x @ _dequant(params, "w_gate", x.dtype)) \
+            * (x @ _dequant(params, "w_up", x.dtype))
     else:
-        h = jax.nn.gelu(x @ params["w_up"])
+        h = jax.nn.gelu(x @ _dequant(params, "w_up", x.dtype))
     h = policy.constrain(h, "ffn_hidden")
-    return h @ params["w_down"]
+    return h @ _dequant(params, "w_down", x.dtype)
 
 
 # ---------------------------------------------------------------- moe
@@ -71,14 +102,19 @@ def init_moe_params(key, cfg, dtype):
             scale = jnp.maximum(scale, 1e-8)
             p[k] = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
             p[f"s_{k[2:]}"] = scale  # (E, 1, 1) fp32
-    return p
+    return quantize_weight_tree(p, cfg.weight_quant)
 
 
 def _dequant(params, name, compute_dtype=jnp.bfloat16):
     w = params[name]
+    if w.dtype == jnp.uint8:  # packed int4 + per-group scale/zero
+        return dequant_int4(w, params[f"s_{name[2:]}"],
+                            params[f"z_{name[2:]}"]).astype(compute_dtype)
     if w.dtype == jnp.int8:
-        return (w.astype(jnp.float32)
-                * params[f"s_{name[2:]}"]).astype(compute_dtype)
+        s = params[f"s_{name[2:]}"]
+        if s.ndim == w.ndim + 1:  # grouped along K (weight_quant="int8")
+            return dequant_int8(w, s).astype(compute_dtype)
+        return (w.astype(jnp.float32) * s).astype(compute_dtype)
     return w
 
 
@@ -238,9 +274,12 @@ def moe_ffn_ep(params, cfg, x, policy):
     cap = capacity_of(B * T // policy.dp_size, m)
 
     batch_spec = policy.spec("resid")  # e.g. P(("pod","data"), None, None)
-    wkeys = [k for k in params if k.startswith(("w_", "s_"))]
+    wkeys = [k for k in params if k.startswith(("w_", "s_", "z_"))]
+    # experts are stacked on axis 0 for every key; quantised trees carry
+    # extra trailing dims (grouped scales are (E, G, 1, f)), so build each
+    # spec from the array's own rank
     in_specs = (batch_spec, P()) + tuple(
-        P(ep_axis, None, None) for _ in wkeys)
+        P(ep_axis, *([None] * (params[k].ndim - 1))) for k in wkeys)
 
     @partial(_shard_map, mesh=mesh, in_specs=in_specs,
              out_specs=batch_spec)

@@ -266,6 +266,7 @@ class Session:
         out = {"budget_bytes": self.budget_bytes,
                "system": self.system.name,
                "replans": len(self.replan_log),
+               "weight_quant": self.cfg.weight_quant,
                "pinned_bytes": self.schedule.pinned_bytes,
                "scratch_bytes": self.schedule.scratch_bytes}
         if self._executor is not None:
@@ -273,6 +274,8 @@ class Session:
             pf = ex.prefill_stats
             out["executor"] = {
                 "streamed_bytes": ex.streamed_bytes,
+                # per-storage-format split of the same bytes (DESIGN.md §11)
+                "streamed_bytes_by_dtype": dict(ex.streamed_bytes_by_dtype),
                 "staged_bytes": ex.staged_bytes,
                 "engine_calls": dict(ex.engine_calls),
                 "copy_s_hidden": ex.copy_s_hidden,

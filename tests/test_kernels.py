@@ -9,7 +9,8 @@ import pytest
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.streamed_matmul import (
-    quantize_int8, streamed_matmul, streamed_matmul_int8)
+    quantize_int4, quantize_int8, streamed_matmul, streamed_matmul_int4,
+    streamed_matmul_int8)
 
 DTYPES = [jnp.float32, jnp.bfloat16]
 
@@ -81,3 +82,37 @@ def test_streamed_matmul_int8(key):
     dense = np.asarray(x) @ np.asarray(w)
     rel = np.abs(np.asarray(out) - dense).max() / np.abs(dense).max()
     assert rel < 0.05
+
+
+@pytest.mark.parametrize("group", [64, 128])
+@pytest.mark.parametrize("M,K,N,bk", [(128, 512, 256, None),
+                                      (64, 256, 128, 256),
+                                      (128, 384, 128, 128)])
+def test_streamed_matmul_int4_sweep(key, group, M, K, N, bk):
+    """Fused int4-dequant kernel vs the unpack-and-dequant oracle, across
+    block and quantisation-group sizes (DESIGN.md §11)."""
+    if bk is not None and bk % group:
+        pytest.skip("block_k must hold whole groups")
+    ks = jax.random.split(key, 2)
+    x = jax.random.normal(ks[0], (M, K), jnp.float32)
+    w = jax.random.normal(ks[1], (K, N), jnp.float32)
+    packed, scales, zeros = quantize_int4(w, group_size=group)
+    out = streamed_matmul_int4(x, packed, scales, zeros, block_m=64,
+                               block_n=64, block_k=bk, interpret=True)
+    ref = kref.streamed_matmul_int4_ref(x, packed, scales, zeros)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-3)
+    # the quantised product tracks the dense one within int4 error
+    dense = np.asarray(x) @ np.asarray(w)
+    rel = np.abs(np.asarray(out) - dense).max() / np.abs(dense).max()
+    assert rel < 0.2
+
+
+def test_streamed_matmul_int4_ragged_groups_rejected(key):
+    """K that does not tile into balanced groups must raise, pointing the
+    caller at the jnp dequant path instead of failing a kernel assert."""
+    w = jax.random.normal(key, (700, 128), jnp.float32)
+    packed, scales, zeros = quantize_int4(w)   # 6 groups of 117 (ragged)
+    x = jax.random.normal(key, (128, 700), jnp.float32)
+    with pytest.raises(ValueError, match="dequant_int4"):
+        streamed_matmul_int4(x, packed, scales, zeros, interpret=True)
