@@ -1,0 +1,169 @@
+"""Paged-KV capacity / eviction / prefix-reuse benchmark (DESIGN.md §12).
+
+After PRs 4-6 shrank the weight traffic, the stacked ``(L, B, KV, S, hd)``
+cache is what caps batch and context: it pre-allocates every layer's full
+window up front. The paged layout keeps only a sliding window of layers
+resident (begin/end_layer pin exactly the in-flight layer's blocks) and
+spills the rest to host, so the SAME KV byte budget sustains a multiple of
+the stacked batch x context. Three sections:
+
+- **capacity**: run a paged decode whose batch x context is several times
+  what the stacked cache could fit in the same KV bytes, assert >= 2x
+  (the acceptance criterion) AND bit-identity against a stacked reference
+  run (which needs proportionally more VRAM to exist at all);
+- **eviction storm**: decode TPS with the pool sized at the working-set
+  floor (constant evict + demand-restore) vs an ample pool — the price of
+  running at capacity;
+- **prefix reuse**: admissions sharing a system prompt skip the covered
+  blocks; chunk counts are asserted (deterministic), TTFT reported.
+
+    PYTHONPATH=src python -m benchmarks.run kv_paged
+
+``REPRO_BENCH_SMOKE=1`` shrinks the sweep to a CI-sized smoke run.
+"""
+from __future__ import annotations
+
+import os
+
+# bit-identity is asserted across differently-compiled paths: pin per-op
+# bf16 rounding exactly as tests/conftest.py does (see the comment there)
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_allow_excess_precision" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_allow_excess_precision=false").strip()
+
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+import jax  # noqa: E402
+
+from benchmarks.common import get_db, write_csv  # noqa: E402
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core import (CLI2, InferenceSetting, PipelinedExecutor,  # noqa: E402
+                        TimingEstimator, build_graph, build_schedule)
+from repro.core.serving import ContinuousBatcher, Request  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.models.common import greedy_token  # noqa: E402
+
+ARCH = "yi-9b"
+BUDGET_FRAC = 0.3
+BATCH = 2
+PAGE = 16
+
+
+def _decode_tps(ex, last, kv, pos, steps):
+    import jax.numpy as jnp
+    gen, kv = ex.decode(greedy_token(last), kv, pos, steps=1)  # compile
+    t0 = time.perf_counter()
+    gen2, kv = ex.decode(jnp.asarray(gen[:, -1:]), kv, pos + 1, steps=steps)
+    wall = time.perf_counter() - t0
+    return np.concatenate([np.asarray(gen), np.asarray(gen2)], axis=1), \
+        kv, (BATCH * steps) / wall
+
+
+def run():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    n_layers = 4 if smoke else 6
+    s0 = 32                       # stacked window the KV budget is sized for
+    s1 = (3 if smoke else 4) * s0  # paged window under the SAME budget
+    steps = 4 if smoke else 8
+
+    cfg = get_smoke_config(ARCH).replace(n_layers=n_layers)
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    db = get_db("cli2")
+    subs = build_graph(cfg, wdtype=2)
+    budget = int(sum(s.weight_bytes for s in subs) * BUDGET_FRAC) + 1
+    sched = build_schedule(budget, subs, TimingEstimator(db, CLI2),
+                           InferenceSetting(batch=BATCH, context=s1))
+
+    # ---- capacity: one KV byte budget, two layouts -----------------------
+    kv_per_tok = 2 * cfg.n_kv_heads * cfg.resolved_head_dim * 2
+    budget_kv_bytes = n_layers * BATCH * s0 * kv_per_tok  # stacked @ (B,s0)
+    block_bytes = kv_per_tok * PAGE
+    pool_pages = budget_kv_bytes // block_bytes
+    stacked_needs = n_layers * BATCH * s1 * kv_per_tok
+
+    tokens = jax.random.randint(jax.random.PRNGKey(1),
+                                (BATCH, s1 - steps - 1), 0, cfg.vocab)
+    ex_paged = PipelinedExecutor(cfg, params, sched, max_seq=s1,
+                                 kv_layout="paged", kv_pool_pages=pool_pages)
+    last, kv, pos = ex_paged.prefill(tokens)
+    gen_p, kv, tps_storm = _decode_tps(ex_paged, last, kv, pos, steps)
+
+    # stacked reference needs stacked_needs KV bytes to run at all
+    ex_ref = PipelinedExecutor(cfg, params, sched, max_seq=s1)
+    last, kvr, pos = ex_ref.prefill(tokens)
+    gen_r, _, _ = _decode_tps(ex_ref, last, kvr, pos, steps)
+    assert np.array_equal(gen_p, gen_r), \
+        "paged decode at capacity diverged from the stacked reference"
+    assert kv.stats.evictions > 0, \
+        "fixture bug: capacity run never exercised the pool limit"
+
+    ratio = (BATCH * s1) / (BATCH * s0)
+    assert stacked_needs > budget_kv_bytes, \
+        "fixture bug: the stacked cache fits the budget"
+    assert ratio >= 2.0, f"paged capacity ratio {ratio} below the 2x bar"
+    print(f"kv_paged,capacity,kv_budget_mb,{budget_kv_bytes / 1e6:.3f},"
+          f"stacked_tokens,{BATCH * s0},paged_tokens,{BATCH * s1},"
+          f"ratio,{ratio:.1f}x,evictions,{kv.stats.evictions}")
+
+    # ---- eviction storm TPS vs ample pool --------------------------------
+    ex_ample = PipelinedExecutor(cfg, params, sched, max_seq=s1,
+                                 kv_layout="paged")
+    last, kva, pos = ex_ample.prefill(tokens)
+    gen_a, kva, tps_ample = _decode_tps(ex_ample, last, kva, pos, steps)
+    assert np.array_equal(gen_a, gen_r)
+    assert kva.stats.evictions == 0
+    ev_per_step = kv.stats.evictions / (steps + 1)
+    print(f"kv_paged,eviction_storm,tps_storm,{tps_storm:.1f},"
+          f"tps_ample,{tps_ample:.1f},evictions_per_step,{ev_per_step:.1f},"
+          f"demanded_mb,{kv.stats.demanded_page_bytes / 1e6:.3f}")
+
+    # ---- prefix-reuse TTFT -----------------------------------------------
+    scfg = get_smoke_config(ARCH)
+    sparams = build_model(scfg).init(jax.random.PRNGKey(0))
+    ssubs = build_graph(scfg, wdtype=2)
+    sbudget = int(sum(s.weight_bytes for s in ssubs) * BUDGET_FRAC) + 1
+    ssched = build_schedule(sbudget, ssubs, TimingEstimator(db, CLI2),
+                            InferenceSetting(batch=1, context=64))
+    rng = np.random.RandomState(3)
+    shared = rng.randint(0, scfg.vocab, size=32).astype(np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [shared, rng.randint(0, scfg.vocab, size=8)
+                         .astype(np.int32)]),
+                    max_new_tokens=2)
+            for i in range(3)]
+    b = ContinuousBatcher(scfg, sparams, ssched, max_batch=1, max_seq=64,
+                          fused=True, kv_layout="paged")
+    b.serve(reqs)
+    st = b.stats()["paged_kv"]
+    assert st["prefix_hits"] == 2 and st["prefix_hit_blocks"] == 4, st
+    pf = b.ex.stats.prefill_stats
+    cold_tok, warm_tok = pf[0]["tokens"], pf[-1]["tokens"]
+    assert pf[0]["prefix_tokens"] == 0 and pf[-1]["prefix_tokens"] == 32
+    assert warm_tok < cold_tok, \
+        "prefix hit did not shrink the prefilled suffix"
+    ttft_cold, ttft_warm = reqs[0].ttft, float(np.mean([r.ttft
+                                                        for r in reqs[1:]]))
+    print(f"kv_paged,prefix_reuse,tokens_cold,{cold_tok},"
+          f"tokens_warm,{warm_tok},ttft_cold_ms,{ttft_cold * 1e3:.2f},"
+          f"ttft_warm_ms,{ttft_warm * 1e3:.2f},"
+          f"hit_blocks,{st['prefix_hit_blocks']}")
+
+    path = write_csv("bench_kv_paged.csv", [
+        ["capacity", f"{budget_kv_bytes / 1e6:.3f}", BATCH * s0, BATCH * s1,
+         f"{ratio:.1f}", kv.stats.evictions],
+        ["eviction_storm", f"{tps_storm:.1f}", f"{tps_ample:.1f}",
+         f"{ev_per_step:.1f}", f"{kv.stats.demanded_page_bytes / 1e6:.3f}",
+         ""],
+        ["prefix_reuse", cold_tok, warm_tok,
+         f"{ttft_cold * 1e3:.2f}", f"{ttft_warm * 1e3:.2f}",
+         st["prefix_hit_blocks"]],
+    ], ["section", "a", "b", "c", "d", "e"])
+    print(f"kv_paged,csv,{path}")
+
+
+if __name__ == "__main__":
+    run()

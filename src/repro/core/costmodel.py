@@ -38,6 +38,15 @@ class Placement:
                f"{'s' if self.streamed else ''}"
 
 
+def kv_block_bytes(kv_sub: SubLayer, page_size: int) -> int:
+    """Bytes of ONE paged-KV block of this layer's cache — ``page_size``
+    tokens across BOTH cache sides (``kv_bytes_per_token`` already covers
+    k + v). The planner sizes the page pool in these units, and the
+    executor's ``kvpage`` demand shards carry exactly this weight_bytes
+    (DESIGN.md §12)."""
+    return kv_sub.kv_bytes_per_token * page_size
+
+
 @dataclass
 class Plan:
     name: str

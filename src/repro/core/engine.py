@@ -73,6 +73,21 @@ class SubLayerEngine:
                                          donate_argnums=donate)
         self.attn_decode_step = jax.jit(self._attn_decode_step,
                                         donate_argnums=donate)
+        # slot-threaded prefill: writes ONE slot of the full stacked cache
+        # inside the donated jitted step, so serving admissions stop
+        # materialising a whole-cache copy per slot write (DESIGN.md §12)
+        self.attn_prefill_slot_step = jax.jit(self._attn_prefill_slot_step,
+                                              donate_argnums=donate)
+        # paged-KV steps (DESIGN.md §12): the cache is a physical page pool
+        # plus a per-layer page table; gather/scatter replace the stacked
+        # dynamic slices, everything downstream is the same attention math
+        self.attn_decode_paged_step = jax.jit(self._attn_decode_paged_step,
+                                              donate_argnums=donate)
+        self.attn_prefill_paged_step = jax.jit(self._attn_prefill_paged_step,
+                                               donate_argnums=donate)
+        donate_pools = (0, 1) if jax.default_backend() != "cpu" else ()
+        self.fold_page_step = jax.jit(self._fold_page_step,
+                                      donate_argnums=donate_pools)
         self._ffn_step_jit = jax.jit(self._ffn_step,
                                      static_argnames=("streamed",))
         self.moe_step = jax.jit(self._moe_step)
@@ -124,13 +139,23 @@ class SubLayerEngine:
         positions), so the mask only has to protect the cache itself.
         """
         self.trace_counts["attn_prefill"] += 1
+        ck = jax.lax.dynamic_index_in_dim(kstack, layer, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(vstack, layer, 0, keepdims=False)
+        out, ck, cv = self._prefill_attn_math(w, x, ck, cv, pos, valid_len)
+        kstack = jax.lax.dynamic_update_index_in_dim(kstack, ck, layer, 0)
+        vstack = jax.lax.dynamic_update_index_in_dim(vstack, cv, layer, 0)
+        return x + out, kstack, vstack
+
+    def _prefill_attn_math(self, w, x, ck, cv, pos, valid_len):
+        """The cache-slice-independent core of a prefill attention step —
+        shared by the layer-indexed, the slot-threaded and (modulo the
+        gather/scatter) the paged variants, so they stay bit-identical by
+        construction. Returns (out, ck, cv)."""
         cfg = self.cfg
         B, T, _ = x.shape
         positions = (pos + jnp.arange(T)[None, :]) * jnp.ones((B, 1),
                                                               jnp.int32)
         h = rmsnorm(x, w["ln1"], cfg.norm_eps)
-        ck = jax.lax.dynamic_index_in_dim(kstack, layer, 0, keepdims=False)
-        cv = jax.lax.dynamic_index_in_dim(vstack, layer, 0, keepdims=False)
         q, k, v = attn_mod.qkv_project(w["attn"], cfg, h, positions)
         q = self.policy.constrain(q, "heads")
         ck_new, cv_new = attn_mod.cache_update(ck, cv, k, v, pos)
@@ -143,8 +168,31 @@ class SubLayerEngine:
         o = attn_mod.attend_cached(q, ck, cv, pos)
         o = self.policy.constrain(o, "heads")
         out = o.reshape(B, T, -1) @ w["attn"]["wo"]
-        kstack = jax.lax.dynamic_update_index_in_dim(kstack, ck, layer, 0)
-        vstack = jax.lax.dynamic_update_index_in_dim(vstack, cv, layer, 0)
+        return out, ck, cv
+
+    def _attn_prefill_slot_step(self, w, x, kstack, vstack, layer, slot,
+                                pos, valid_len):
+        """Slot-threaded layer-major prefill attention (DESIGN.md §12).
+
+        x: (1, T, d) — ONE admitted sequence; ``slot`` is its row in the
+        shared stacked cache, traced like ``layer`` so every slot of every
+        admission hits one executable. The slot row is sliced and written
+        back *inside* the donated jitted step, replacing the serving-side
+        ``kv.at[:, slot:slot+1].set`` that materialised a full-cache copy
+        per admission. The math is ``_prefill_attn_math`` verbatim, so the
+        path is bit-identical to the batch-wide prefill step.
+        """
+        self.trace_counts["attn_prefill_slot"] += 1
+        L, B, KV, S, hd = kstack.shape
+        ck = jax.lax.dynamic_slice(kstack, (layer, slot, 0, 0, 0),
+                                   (1, 1, KV, S, hd))[0]
+        cv = jax.lax.dynamic_slice(vstack, (layer, slot, 0, 0, 0),
+                                   (1, 1, KV, S, hd))[0]
+        out, ck, cv = self._prefill_attn_math(w, x, ck, cv, pos, valid_len)
+        kstack = jax.lax.dynamic_update_slice(kstack, ck[None],
+                                              (layer, slot, 0, 0, 0))
+        vstack = jax.lax.dynamic_update_slice(vstack, cv[None],
+                                              (layer, slot, 0, 0, 0))
         return x + out, kstack, vstack
 
     def _attn_decode_step(self, w, x, kstack, vstack, layer, pos_vec, active):
@@ -178,6 +226,91 @@ class SubLayerEngine:
         kstack = jax.lax.dynamic_update_index_in_dim(kstack, ck, layer, 0)
         vstack = jax.lax.dynamic_update_index_in_dim(vstack, cv, layer, 0)
         return x + out, kstack, vstack
+
+    # ------------------------------------------------------------ paged kv
+    # The paged cache (DESIGN.md §12) stores KV in physical pages
+    # (P, KV, page_size, hd); a per-layer table (B, n_blocks) maps each
+    # slot's logical blocks to pages. Writes scatter through the table
+    # (invalid/masked positions are routed to page 0, the null sink, so
+    # no conditional is needed); reads gather ``pool[table]`` and reshape
+    # to the exact (B, KV, S, hd) stacked view, after which the attention
+    # math is shared with the stacked steps — garbage in unwritten page
+    # slots sits at masked positions, whose softmax weight underflows to
+    # exactly 0.0, keeping the paged paths bit-identical to stacked.
+    @staticmethod
+    def _pool_view(pool, table):
+        """Gather (P, KV, ps, hd) pages into a (B, KV, n_blocks*ps, hd)
+        stacked-cache view through the page table (B, n_blocks)."""
+        B, nblk = table.shape
+        g = jnp.transpose(pool[table], (0, 2, 1, 3, 4))
+        return g.reshape(B, g.shape[1], nblk * pool.shape[2], g.shape[4])
+
+    def _attn_decode_paged_step(self, w, x, k_pool, v_pool, table,
+                                pos_vec, active):
+        """Fused multi-slot decode against the page pool.
+
+        x: (B, 1, d); table: (B, n_blocks) physical page ids of the
+        CURRENT layer; pos_vec/active as in ``_attn_decode_step``. The new
+        token's k/v scatter into page ``table[b, pos_b // ps]`` at offset
+        ``pos_b % ps`` (inactive slots write the null page), then the
+        gathered view feeds the same ``attend_decode``.
+        """
+        self.trace_counts["attn_decode_paged"] += 1
+        cfg = self.cfg
+        B = x.shape[0]
+        ps = k_pool.shape[2]
+        h = rmsnorm(x, w["ln1"], cfg.norm_eps)
+        q, k, v = attn_mod.qkv_project(w["attn"], cfg, h, pos_vec[:, None])
+        q = self.policy.constrain(q, "heads")
+        pid = table[jnp.arange(B), pos_vec // ps]
+        pid = jnp.where(active, pid, 0)
+        off = pos_vec % ps
+        k_pool = k_pool.at[pid, :, off].set(k[:, 0].astype(k_pool.dtype))
+        v_pool = v_pool.at[pid, :, off].set(v[:, 0].astype(v_pool.dtype))
+        ck = self.policy.constrain(self._pool_view(k_pool, table), "kv_cache")
+        cv = self.policy.constrain(self._pool_view(v_pool, table), "kv_cache")
+        o = attn_mod.attend_decode(q, ck, cv, pos_vec)
+        o = self.policy.constrain(o, "heads")
+        out = o.reshape(B, 1, -1) @ w["attn"]["wo"]
+        return x + out, k_pool, v_pool
+
+    def _attn_prefill_paged_step(self, w, x, k_pool, v_pool, table, pos,
+                                 valid_len):
+        """Layer-major prefill chunk against the page pool.
+
+        x: (B, T, d) at absolute positions pos..pos+T-1; padded-tail
+        positions (>= ``valid_len``) scatter to the null page — the paged
+        equivalent of the stacked step's keep-mask.
+        """
+        self.trace_counts["attn_prefill_paged"] += 1
+        cfg = self.cfg
+        B, T, _ = x.shape
+        ps = k_pool.shape[2]
+        positions = (pos + jnp.arange(T)[None, :]) * jnp.ones((B, 1),
+                                                              jnp.int32)
+        h = rmsnorm(x, w["ln1"], cfg.norm_eps)
+        q, k, v = attn_mod.qkv_project(w["attn"], cfg, h, positions)
+        q = self.policy.constrain(q, "heads")
+        tpos = pos + jnp.arange(T)
+        valid = jnp.arange(T) < valid_len
+        pid = jnp.where(valid[None, :], table[:, tpos // ps], 0)
+        off = jnp.broadcast_to((tpos % ps)[None, :], (B, T))
+        k_pool = k_pool.at[pid, :, off].set(k.astype(k_pool.dtype))
+        v_pool = v_pool.at[pid, :, off].set(v.astype(v_pool.dtype))
+        ck = self.policy.constrain(self._pool_view(k_pool, table), "kv_cache")
+        cv = self.policy.constrain(self._pool_view(v_pool, table), "kv_cache")
+        o = attn_mod.attend_cached(q, ck, cv, pos)
+        o = self.policy.constrain(o, "heads")
+        out = o.reshape(B, T, -1) @ w["attn"]["wo"]
+        return x + out, k_pool, v_pool
+
+    def _fold_page_step(self, k_pool, v_pool, kp, vp, pid):
+        """Land ONE restored block's staged page data in the pools — the
+        demand-stream fold for kv_page shards (pid traced, one executable
+        for every fault)."""
+        self.trace_counts["fold_page"] += 1
+        return (k_pool.at[pid].set(kp.astype(k_pool.dtype)),
+                v_pool.at[pid].set(vp.astype(v_pool.dtype)))
 
     # ------------------------------------------------------------ ffn/moe
     def ffn_step(self, w, x, streamed=False):

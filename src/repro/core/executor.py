@@ -30,9 +30,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.costmodel import Placement
 from repro.core.engine import SubLayerEngine
+from repro.core.kvpaged import NULL_PAGE, PAGE_SIZE, PagedKVCache
 from repro.core.planner import Schedule
 from repro.core.prefetch import PrefetchEngine
+from repro.core.sublayer import SubLayer
 from repro.models import attention as attn_mod
 from repro.models import mlp as mlp_mod
 from repro.models.common import NoPolicy, greedy_token, rmsnorm
@@ -72,6 +75,12 @@ class ExecStats:
     demanded_expert_bytes: int = 0
     resident_expert_bytes: int = 0       # pinned expert bytes right now
     pass_expert_stats: list = field(default_factory=list)
+    # paged-KV block restores (DESIGN.md §12): the second demand-streamable
+    # shard kind beside cold experts. The ledger generalises to
+    # streamed_bytes == static plan + demanded_expert_bytes +
+    # demanded_page_bytes, always ("kv" bucket in streamed_bytes_by_dtype).
+    page_faults: int = 0
+    demanded_page_bytes: int = 0
 
     @property
     def expert_hit_rate(self) -> float:
@@ -100,12 +109,27 @@ class PipelinedExecutor:
 
     def __init__(self, cfg, params, schedule: Schedule, max_seq: int = 512,
                  overlap: bool = True, jit_engine: bool = True,
-                 prefill_mode: str | None = None):
+                 prefill_mode: str | None = None,
+                 kv_layout: str = "stacked",
+                 kv_page_size: int | None = None,
+                 kv_pool_pages: int | None = None):
         assert cfg.family in ("dense", "moe"), \
             "executor demo covers the dense/moe families"
         self.cfg = cfg
         self.schedule = schedule
         self.max_seq = max_seq
+        # paged KV (DESIGN.md §12) needs the jitted engine's paged
+        # gather/scatter steps; an explicit "paged" that cannot be honoured
+        # raises (same contract as expert_granular / prefill_mode)
+        if kv_layout not in ("stacked", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if kv_layout == "paged" and not jit_engine:
+            raise ValueError("kv_layout='paged' requires the jitted engine "
+                             "(jit_engine=True)")
+        self.kv_layout = kv_layout
+        self.kv_page_size = kv_page_size or PAGE_SIZE
+        self.kv_pool_pages = kv_pool_pages   # usable pages; None -> ample
+        self._active_kvcache = None          # paged cache of the live pass
         # layer-major weight-stationary prefill (DESIGN.md §10) needs the
         # jitted engine's *_prefill_step variants; the eager baseline keeps
         # the seed's chunk-major loop. An explicit "layer_major" that
@@ -268,6 +292,13 @@ class PipelinedExecutor:
                     self._EXPERT_KEYS + self._SCALE_KEYS + self._ZERO_KEYS
                     if k in moe]
             return {k: moe[k][e] for k in keys}
+        if sub.kind == "kv_page":
+            # paged-KV block restore (DESIGN.md §12): the "weights" are the
+            # faulted block's host-evicted page data. Resolved against the
+            # pass's live cache — also from the prefetch worker thread.
+            cache = self._active_kvcache
+            assert cache is not None, "kv_page fetch outside a paged pass"
+            return cache.host_tree(sub.meta["bid"])
         raise ValueError(sub.kind)
 
     def _fetch_sync(self, placement):
@@ -535,13 +566,56 @@ class PipelinedExecutor:
         return [eng.moe_combine_step(x, bp, bs, mask, aux)
                 for x, bp, bs, (_, aux) in zip(xs, bufs_p, bufs_s, routed)]
 
+    # ------------------------------------------------------------ paged kv
+    def _page_placement(self, cache, bid: int):
+        """Synthetic demand-only placement for one paged-KV block restore
+        (DESIGN.md §12). Never part of a plan (``kv_page`` is not a
+        streamable kind) — fabricated per fault so restores ride the SAME
+        demand pool, acquire/release protocol and streamed-bytes ledger as
+        §9's cold experts, bucketed as "kv" in streamed_bytes_by_dtype."""
+        sub = SubLayer(name=f"kvpage/{bid}", kind="kv_page", layer=0,
+                       weight_bytes=cache.block_bytes,
+                       meta={"quant": "kv", "bid": bid})
+        return Placement(sub=sub, residency="sysram", engine="gpu",
+                         streamed=True)
+
+    def _page_fault_layer(self, cache, layer: int, page_stream: bool):
+        """Restore this layer's faulted KV blocks before its attention
+        step. Requests go out per layer, not per pass: a pass-wide sweep
+        would queue later layers' pages ahead of an earlier MoE layer's
+        expert demands in the FIFO demand queue and deadlock its bounded
+        slots. Within the layer the restores still pipeline — every fault
+        is enqueued before the first acquire, so block j+1 stages while
+        block j folds (fold-then-release, like ``_fold_cold_experts``)."""
+        faults = cache.begin_layer(layer)
+        if not faults:
+            return
+        pls = [self._page_placement(cache, bid) for bid in faults]
+        if page_stream:
+            self.prefetch.request(pls)
+            for pl, bid in zip(pls, faults):
+                tree = self.prefetch.acquire(pl.sub.name)
+                self._account_streamed(pl)
+                cache.fold(bid, tree)
+                self.prefetch.release(pl.sub.name)
+        else:
+            # at-use restore: overlap disabled, or a straggler evicted
+            # after this pass's demand sizing; _fetch_sync accounts the
+            # streamed bytes
+            for pl, bid in zip(pls, faults):
+                cache.fold(bid, self._fetch_sync(pl))
+        self.stats.page_faults += len(faults)
+        self.stats.demanded_page_bytes += len(faults) * cache.block_bytes
+
     # ------------------------------------------------------------ passes
-    def _begin_pass(self, tier: int):
+    def _begin_pass(self, tier: int, page_demand_bytes: int = 0):
         """Start one pass at ``tier``: begin the prefetch session over the
         tier plan's streamed placements and return ``(by_name, streaming)``
         for ``_weights_for`` lookups. Scratch sizing is read from the bound
         schedule's TierEntry each pass, so a live ``rebind`` re-sizes the
-        next session's staging budget automatically (DESIGN.md §8)."""
+        next session's staging budget automatically (DESIGN.md §8).
+        ``page_demand_bytes`` joins the demand-slot sizing when the pass
+        expects paged-KV restores (DESIGN.md §12)."""
         entry = self.schedule.tiers[tier]
         plan = entry.plan
         self.stats.tiers_used.append(tier)
@@ -561,6 +635,7 @@ class PipelinedExecutor:
             demand_bytes = max(
                 (p.sub.weight_bytes for p in plan.streamed_expert_placements()
                  if p.sub.name not in self._pinned_names), default=0)
+            demand_bytes = max(demand_bytes, page_demand_bytes)
         streaming = {p.sub.name for p in order}
         started = bool(order) or demand_bytes > 0
         if started:
@@ -666,23 +741,51 @@ class PipelinedExecutor:
         """
         assert self.engine is not None, "fused decode requires the jitted " \
             "engine (jit_engine=True)"
+        paged = isinstance(kv, PagedKVCache)
+        page_demand = 0
+        if paged:
+            # host-side page-table work: allocate this iteration's write
+            # blocks, find the faulted (host-evicted) ones (DESIGN.md §12)
+            pos_h = np.asarray(pos_vec)
+            act_h = np.asarray(active)
+            faults = kv.prepare_decode({int(s): int(pos_h[s])
+                                        for s in range(len(act_h))
+                                        if act_h[s]})
+            page_demand = kv.block_bytes if faults else 0
+            self._active_kvcache = kv
         by_name, streaming, started = self._begin_pass(
-            self.schedule.pick_decode_tier(n_active))
+            self.schedule.pick_decode_tier(n_active),
+            page_demand_bytes=page_demand)
+        page_stream = paged and started and self._demand_active
         streamed_before = self.stats.streamed_bytes
         demanded_before = (self.stats.expert_demanded,
                            self.stats.expert_hits,
                            self.stats.demanded_expert_bytes)
         try:
             x = self.engine.embed_step(self._embed_dev, tokens)
-            k, v = kv["k"], kv["v"]
-            x, k, v = self._layer_loop(
-                x, k, v, by_name, streaming,
-                lambda w, x, k, v, i: self.engine.attn_decode_step(
-                    w, x, k, v, self._layer_ids[i], pos_vec, active))
+            if paged:
+                def paged_attn(w, x, k, v, i):
+                    self._page_fault_layer(kv, i, page_stream)
+                    x, kv.k_pool, kv.v_pool = \
+                        self.engine.attn_decode_paged_step(
+                            w, x, kv.k_pool, kv.v_pool, kv.layer_table(i),
+                            pos_vec, active)
+                    kv.end_layer(i)
+                    return x, k, v
+
+                x, _, _ = self._layer_loop(x, None, None, by_name,
+                                           streaming, paged_attn)
+            else:
+                k, v = kv["k"], kv["v"]
+                x, k, v = self._layer_loop(
+                    x, k, v, by_name, streaming,
+                    lambda w, x, k, v, i: self.engine.attn_decode_step(
+                        w, x, k, v, self._layer_ids[i], pos_vec, active))
             logits = self.engine.head_step(self._final_dev,
                                            self._unembed_dev, x)
         finally:
             self._end_pass(started)
+            self._active_kvcache = None
         self.stats.decode_passes += 1
         self.stats.pass_streamed_bytes.append(
             self.stats.streamed_bytes - streamed_before)
@@ -697,16 +800,33 @@ class PipelinedExecutor:
                 "hit_rate": (self.stats.expert_hits - h0)
                 / max(demanded, 1),
             })
-        return logits, {"k": k, "v": v}
+        return logits, (kv if paged else {"k": k, "v": v})
 
     def init_kv(self, batch):
         cfg = self.cfg
         hd = cfg.resolved_head_dim
+        if self.kv_layout == "paged":
+            n_pages = None if self.kv_pool_pages is None \
+                else self.kv_pool_pages + 1      # + the null write sink
+            cache = PagedKVCache(cfg, batch, self.max_seq,
+                                 page_size=self.kv_page_size,
+                                 n_pages=n_pages)
+            cache.fold_step = self.engine.fold_page_step
+            # warm the fold executable now (against the null sink): the
+            # first real fault lands mid-serve and must not pay a compile —
+            # the same no-retrace rationale as fold_expert_step (§8)
+            zp = jnp.zeros((cfg.n_kv_heads, self.kv_page_size, hd),
+                           jnp.bfloat16)
+            cache.k_pool, cache.v_pool = cache.fold_step(
+                cache.k_pool, cache.v_pool, zp, zp,
+                jnp.asarray(NULL_PAGE, jnp.int32))
+            return cache
         shape = (cfg.n_layers, batch, cfg.n_kv_heads, self.max_seq, hd)
         return {"k": jnp.zeros(shape, jnp.bfloat16),
                 "v": jnp.zeros(shape, jnp.bfloat16)}
 
-    def prefill(self, tokens, kv=None, prefill_mode: str | None = None):
+    def prefill(self, tokens, kv=None, prefill_mode: str | None = None,
+                slot: int | None = None):
         """Chunked prefill at the planner-picked tier size (DESIGN.md §10).
 
         ``prefill_mode`` overrides the executor default for this call:
@@ -714,7 +834,12 @@ class PipelinedExecutor:
         every chunk against the resident weights (weight-stationary);
         ``"chunk_major"`` is the chunk-major baseline, one full plan pass
         per chunk. ``kv`` lets a caller (the serving batcher) prefill into
-        an existing cache view instead of a fresh one.
+        an existing cache view instead of a fresh one; ``slot`` targets one
+        row of that shared cache (B must be 1) through the engine's donated
+        slot-threaded step instead of a serving-side whole-slot slice
+        write (DESIGN.md §12). A paged ``kv`` also runs the prefix-cache
+        lookup here: matched full blocks are mapped read-only and only the
+        suffix is computed.
         """
         mode = prefill_mode if prefill_mode is not None else \
             self.prefill_mode
@@ -729,8 +854,28 @@ class PipelinedExecutor:
         B, T = tokens.shape
         if kv is None:
             kv = self.init_kv(B)
+        paged = isinstance(kv, PagedKVCache)
+        if (paged or slot is not None) and mode != "layer_major":
+            raise ValueError("paged / slot-targeted prefill runs "
+                             "layer-major only (jitted engine)")
+        if slot is not None and B != 1:
+            raise ValueError("slot-targeted prefill admits ONE sequence")
+        rows = None
+        pos0 = 0
+        page_demand = 0
+        if paged:
+            rows = [slot] if slot is not None else list(range(B))
+            tok_np = np.asarray(tokens)
+            if B == 1:
+                # prefix-cache lookup (DESIGN.md §12): map shared full
+                # blocks read-only, prefill only the suffix
+                pos0 = kv.prefix_attach(rows[0], tok_np[0])
+            faults = kv.prepare_prefill([(r, T, pos0) for r in rows])
+            page_demand = kv.block_bytes if faults else 0
+            self._active_kvcache = kv
         if mode == "layer_major":
-            tier = self.schedule.pick_prefill_tier(B * T, min_tier=B)
+            tier = self.schedule.pick_prefill_tier(B * (T - pos0),
+                                                   min_tier=B)
         else:
             tier = self.schedule.pick_tier(B * T)
         if tier // B < 1:
@@ -745,9 +890,16 @@ class PipelinedExecutor:
             # prompt length at this tier (no re-trace across chunk counts
             # or tails)
             chunk = tier // B
-            logits, kv, ring_bytes = self._prefill_layer_major(
-                tokens, kv, chunk, tier)
-            chunks = -(-T // chunk)
+            try:
+                logits, kv, ring_bytes = self._prefill_layer_major(
+                    tokens if pos0 == 0 else tokens[:, pos0:], kv, chunk,
+                    tier, slot=slot, rows=rows, pos0=pos0,
+                    page_demand=page_demand)
+            finally:
+                self._active_kvcache = None
+            if paged and B == 1:
+                kv.prefix_register(rows[0], tok_np[0])
+            chunks = -(-(T - pos0) // chunk)
         else:
             chunk = min(T, tier // B)
             logits = None
@@ -762,10 +914,13 @@ class PipelinedExecutor:
                 self.stats.prefill_passes += 1
                 chunks += 1
                 pos = end
-        self._record_prefill(mode, chunks, before, ring_bytes)
+        self._record_prefill(mode, chunks, before, ring_bytes,
+                             tokens=T - pos0, prefix_tokens=pos0)
         return logits[:, -1:], kv, T
 
-    def _prefill_layer_major(self, tokens, kv, chunk: int, tier: int):
+    def _prefill_layer_major(self, tokens, kv, chunk: int, tier: int,
+                             slot: int | None = None, rows=None,
+                             pos0: int = 0, page_demand: int = 0):
         """Weight-stationary prefill (DESIGN.md §10): ONE prefetch session
         per prompt; for each sub-layer in stream order, all chunks run
         against the resident weights before the stream advances — so each
@@ -781,7 +936,8 @@ class PipelinedExecutor:
         """
         cfg = self.cfg
         eng = self.engine
-        B, T = tokens.shape
+        paged = isinstance(kv, PagedKVCache)
+        B, T = tokens.shape          # T: SUFFIX length (tokens after pos0)
         C = -(-T // chunk)
         tail = T - (C - 1) * chunk
         # pad the tail chunk to the chunk size so one executable serves any
@@ -793,20 +949,26 @@ class PipelinedExecutor:
         # assignments the unpadded baseline drops). Either way the tail
         # runs at its natural shape instead — one extra trace, bit-exact
         # always.
-        pad_ok = C * chunk <= self.max_seq and (
+        pad_ok = pos0 + C * chunk <= self.max_seq and (
             cfg.moe is None
             or mlp_mod.capacity_is_dropless(B * chunk, cfg.moe))
         pad = C * chunk - T if pad_ok else 0
         if pad:
             tokens = jnp.pad(tokens, ((0, 0), (0, pad)))
-        by_name, streaming, started = self._begin_pass(tier)
+        by_name, streaming, started = self._begin_pass(
+            tier, page_demand_bytes=page_demand)
+        page_stream = paged and started and self._demand_active
+        slot_arr = None if slot is None else jnp.asarray(slot, jnp.int32)
         try:
-            k, v = kv["k"], kv["v"]
+            k = v = None
+            if not paged:
+                k, v = kv["k"], kv["v"]
             xs = [eng.embed_step(self._embed_dev,
                                  tokens[:, c * chunk:
                                         min((c + 1) * chunk, tokens.shape[1])])
                   for c in range(C)]
-            pos_c = [jnp.asarray(c * chunk, jnp.int32) for c in range(C)]
+            pos_c = [jnp.asarray(pos0 + c * chunk, jnp.int32)
+                     for c in range(C)]
             valid_c = [jnp.asarray(chunk if c < C - 1 else tail, jnp.int32)
                        for c in range(C)]
             prev_engine = None
@@ -817,10 +979,27 @@ class PipelinedExecutor:
                 if prev_engine is not None and prev_engine != pa.engine:
                     self.stats.boundary_hops += 1
                 prev_engine = pa.engine
-                for c in range(C):
-                    xs[c], k, v = eng.attn_prefill_step(
-                        w, xs[c], k, v, self._layer_ids[i], pos_c[c],
-                        valid_c[c])
+                if paged:
+                    # restore this layer's faulted blocks, then run every
+                    # chunk against the layer's physical page table
+                    self._page_fault_layer(kv, i, page_stream)
+                    table = kv.layer_table(i, rows=rows)
+                    for c in range(C):
+                        xs[c], kv.k_pool, kv.v_pool = \
+                            eng.attn_prefill_paged_step(
+                                w, xs[c], kv.k_pool, kv.v_pool, table,
+                                pos_c[c], valid_c[c])
+                    kv.end_layer(i)
+                elif slot is not None:
+                    for c in range(C):
+                        xs[c], k, v = eng.attn_prefill_slot_step(
+                            w, xs[c], k, v, self._layer_ids[i], slot_arr,
+                            pos_c[c], valid_c[c])
+                else:
+                    for c in range(C):
+                        xs[c], k, v = eng.attn_prefill_step(
+                            w, xs[c], k, v, self._layer_ids[i], pos_c[c],
+                            valid_c[c])
                 if rel:
                     self.prefetch.release(pa.sub.name)
                 if self.expert_granular:
@@ -857,30 +1036,48 @@ class PipelinedExecutor:
         # the realised activation ring: every chunk's residual held at
         # once, ~one full-prompt residual (DESIGN.md §10 accounting)
         ring_bytes = B * tokens.shape[1] * cfg.d_model * 2
-        return logits, {"k": k, "v": v}, ring_bytes
+        return logits, (kv if paged else {"k": k, "v": v}), ring_bytes
 
     def _prefill_snapshot(self):
         s = self.stats
         return (s.streamed_bytes, s.demanded_expert_bytes, s.copy_s_hidden,
-                s.copy_s_exposed, s.prefill_passes)
+                s.copy_s_exposed, s.prefill_passes, s.demanded_page_bytes)
 
-    def _record_prefill(self, mode, chunks, before, ring_bytes):
+    def _record_prefill(self, mode, chunks, before, ring_bytes,
+                        tokens=0, prefix_tokens=0):
         s = self.stats
         s.prefill_stats.append({
             "mode": mode,
             "chunks": chunks,
+            # prefilled suffix vs prefix-cache coverage (DESIGN.md §12):
+            # a prefix hit shows up as prefix_tokens > 0 and a shorter
+            # tokens count, NOT as fewer chunks (the tier re-picks)
+            "tokens": tokens,
+            "prefix_tokens": prefix_tokens,
             "act_ring_bytes": ring_bytes,
             "passes": s.prefill_passes - before[4],
             "streamed_bytes": s.streamed_bytes - before[0],
             "demanded_expert_bytes": s.demanded_expert_bytes - before[1],
             "copy_s_hidden": s.copy_s_hidden - before[2],
             "copy_s_exposed": s.copy_s_exposed - before[3],
+            "demanded_page_bytes": s.demanded_page_bytes - before[5],
         })
 
     def decode(self, last_tokens, kv, pos, steps=8, greedy=True):
         """Greedy decode loop; returns generated tokens."""
         out = []
         tok = last_tokens
+        if isinstance(kv, PagedKVCache):
+            # paged decode runs the fused multi-slot pass with every row
+            # active (the serving batcher calls _run_decode directly)
+            B = tok.shape[0]
+            active = jnp.ones((B,), bool)
+            for s in range(steps):
+                pos_vec = jnp.full((B,), pos + s, jnp.int32)
+                logits, kv = self._run_decode(tok, kv, pos_vec, active, B)
+                tok = greedy_token(logits[:, -1:])
+                out.append(np.asarray(tok)[:, 0])
+            return np.stack(out, axis=1), kv
         for s in range(steps):
             logits, kv = self._run_chunk(tok, kv, pos + s)
             tok = greedy_token(logits[:, -1:])

@@ -19,7 +19,9 @@ import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.costmodel import Placement, Plan, TimingEstimator
+from repro.core.costmodel import (Placement, Plan, TimingEstimator,
+                                  kv_block_bytes)
+from repro.core.kvpaged import PAGE_SIZE as KV_PAGE_SIZE
 from repro.core.sublayer import STREAMABLE_KINDS, SubLayer
 from repro.core.system import InferenceSetting, SystemConfig
 
@@ -95,6 +97,12 @@ class Schedule:
     scratch_bytes: int
     budget_bytes: int
     match_stats: dict = field(default_factory=dict)
+    # paged-KV pool sizing (DESIGN.md §12): the VRAM bytes the paged cache's
+    # page pool may occupy under this budget (the kv residency the pin pass
+    # reserved, floored at a sliding-window working set), and the block
+    # granularity it was sized for. 0 when the graph carries no kv subs.
+    kv_pool_bytes: int = 0
+    kv_page_size: int = KV_PAGE_SIZE
 
     def pick_tier(self, batch_tokens: int) -> int:
         """Paper: argmin over ceil(tokens/tier) * time[tier].
@@ -362,9 +370,34 @@ def plan_tier(budget: int, subs: List[SubLayer], est: TimingEstimator,
                      prefill_chunk_s=chunk_s)
 
 
+def decide_kv_pool_bytes(subs: List[SubLayer], setting: InferenceSetting,
+                         pinned, page_size: int = KV_PAGE_SIZE) -> int:
+    """Paged-KV page-pool sizing (DESIGN.md §12).
+
+    The pool gets the KV residency the priority pin pass reserved under
+    this budget, floored at a sliding-window working set — two layers of
+    the active batch's blocks plus one block of demand margin — so a pass
+    can always pin its current layer's blocks while the previous layer's
+    drain and the next layer's restore. With an ample budget the reserved
+    bytes cover the full stacked demand and the pool never evicts (paged
+    becomes a pure layout change); under pressure the floor is what lets
+    the paged layout keep serving where the stacked allocation would
+    simply not fit.
+    """
+    kv_subs = [s for s in subs if s.kind == "kv"]
+    if not kv_subs:
+        return 0
+    blocks_per_seq = -(-setting.context // page_size)
+    block_bytes = max(kv_block_bytes(s, page_size) for s in kv_subs)
+    floor = (2 * setting.batch * blocks_per_seq + 1) * block_bytes
+    reserved = sum(s.bytes_resident(setting) for s in kv_subs
+                   if s.name in pinned)
+    return max(reserved, floor)
+
+
 def build_schedule(budget_bytes: int, subs: List[SubLayer],
                    est: TimingEstimator, setting: InferenceSetting,
-                   tiers=TIERS) -> Schedule:
+                   tiers=TIERS, kv_page_size: int = KV_PAGE_SIZE) -> Schedule:
     entries = {}
     for t in tiers:
         e = plan_tier(budget_bytes, subs, est, setting, t)
@@ -375,17 +408,27 @@ def build_schedule(budget_bytes: int, subs: List[SubLayer],
     pinned, used = pin_by_priority(budget_bytes - scratch, subs, setting)
     return Schedule(tiers=entries, pinned_bytes=used, scratch_bytes=scratch,
                     budget_bytes=budget_bytes,
-                    match_stats=dict(est.match_stats))
+                    match_stats=dict(est.match_stats),
+                    kv_pool_bytes=decide_kv_pool_bytes(subs, setting, pinned,
+                                                       kv_page_size),
+                    kv_page_size=kv_page_size)
 
 
 # ---------------------------------------------------------------- metrics
-def estimate_ttft(sched: Schedule, isl: int,
-                  mode: str = "layer_major") -> float:
+def estimate_ttft(sched: Schedule, isl: int, mode: str = "layer_major",
+                  prefix_hit_frac: float = 0.0) -> float:
     """Context phase. The default models the layer-major weight-stationary
     prefill (DESIGN.md §10): streamed plan bytes cross the link once per
     prompt, compute repeats per chunk. ``mode="chunk_major"`` keeps the
     chunk-major model — every chunk re-pays the plan's full transfer, so
-    the TTFT transfer term grows linearly with prompt length."""
+    the TTFT transfer term grows linearly with prompt length.
+    ``prefix_hit_frac`` is the expected prefix-cache coverage of the prompt
+    (DESIGN.md §12): matched blocks map pages instead of prefilling, so
+    only the remaining fraction is computed (floored at one token — a hit
+    never covers the last position)."""
+    if not 0.0 <= prefix_hit_frac <= 1.0:
+        raise ValueError(f"prefix_hit_frac {prefix_hit_frac} not in [0, 1]")
+    isl = max(1, int(round(isl * (1.0 - prefix_hit_frac))))
     if mode == "chunk_major":
         return sched.time_for_tokens(isl)
     return sched.prefill_time(isl, sched.pick_prefill_tier(isl))

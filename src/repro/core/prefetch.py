@@ -32,6 +32,13 @@ the static worker may already hold both static slots staging layers
 for those slots (the consumer won't release them before it gets the
 expert).
 
+Paged-KV restores (DESIGN.md §12) are the second demand-streamable shard
+kind: evicted KV pages a pass touches come back through this same pool as
+synthetic ``kv_page`` shards. The demand queue is FIFO and slot-bounded,
+so the executor requests each layer's page faults only at that layer's
+start — interleaving all layers' pages up front could park a page request
+ahead of an earlier layer's expert demand the consumer is blocked on.
+
 One session (``start``/``finish``) corresponds to one pass over a chunk's
 plan; sessions are cheap (daemon threads) and keep the queues exactly in
 step with the executor's consumption order.
@@ -56,6 +63,7 @@ class PrefetchStats:
     slots: int = 0               # realised double-buffer depth (0: no session)
     demand_slots: int = 0        # realised demand-pool depth (expert shards)
     demanded_sublayers: int = 0  # shards staged through the demand queue
+    demanded_pages: int = 0      # of which: paged-KV restores (kv_page)
 
 
 class _Staged:
@@ -187,6 +195,8 @@ class PrefetchEngine:
                 pl = self._demand_q.popleft()
             self._demand_sem.acquire()
             self.stats.demanded_sublayers += 1
+            if pl.sub.kind == "kv_page":
+                self.stats.demanded_pages += 1
             self._stage_one(pl, self._staged[pl.sub.name])
 
     # ------------------------------------------------------------ demand

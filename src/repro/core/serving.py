@@ -28,6 +28,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.executor import PipelinedExecutor
+from repro.core.kvpaged import PagedKVCache
 from repro.core.planner import Schedule
 from repro.models.common import greedy_token
 
@@ -79,7 +80,10 @@ class ContinuousBatcher:
                  max_batch: int = 4, max_seq: int = 256, fused: bool = True,
                  overlap: bool = True, jit_engine: bool = True,
                  executor: Optional[PipelinedExecutor] = None,
-                 session=None, prefill_mode: Optional[str] = None):
+                 session=None, prefill_mode: Optional[str] = None,
+                 kv_layout: str = "stacked",
+                 kv_page_size: Optional[int] = None,
+                 kv_pool_pages: Optional[int] = None):
         self.cfg = cfg
         self._session = session
         if executor is not None:
@@ -96,6 +100,11 @@ class ContinuousBatcher:
                     f"batcher executor runs prefill_mode="
                     f"{executor.prefill_mode!r}; cannot build with "
                     f"{prefill_mode!r} (set it on the Session/executor)")
+            if kv_layout != "stacked" and kv_layout != executor.kv_layout:
+                raise ValueError(
+                    f"batcher executor runs kv_layout="
+                    f"{executor.kv_layout!r}; cannot build with "
+                    f"{kv_layout!r} (set it on the Session/executor)")
             self.ex = executor
             self.schedule = executor.schedule
             self.max_seq = executor.max_seq
@@ -106,11 +115,17 @@ class ContinuousBatcher:
             self.ex = PipelinedExecutor(cfg, params, schedule,
                                         max_seq=max_seq, overlap=overlap,
                                         jit_engine=jit_engine,
-                                        prefill_mode=prefill_mode)
+                                        prefill_mode=prefill_mode,
+                                        kv_layout=kv_layout,
+                                        kv_page_size=kv_page_size,
+                                        kv_pool_pages=kv_pool_pages)
         self.max_batch = max_batch
         # the fused step runs through the jitted engine's batched decode
         self.fused = fused and jit_engine
         self.kv = self.ex.init_kv(max_batch)
+        # paged KV (DESIGN.md §12): admissions map pages and look up the
+        # prefix cache inside executor.prefill; retire unmaps the slot
+        self._paged = isinstance(self.kv, PagedKVCache)
         self.slots: List[Optional[Request]] = [None] * max_batch
         # admission queue OUTLIVES serve() calls: a paused serve (relative
         # max_iterations) may return before every request found a free
@@ -191,14 +206,28 @@ class ContinuousBatcher:
         link once per admitted prompt, not once per chunk."""
         T = len(req.prompt)
         tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        kv_slot = {
-            "k": self.kv["k"][:, slot:slot + 1],
-            "v": self.kv["v"][:, slot:slot + 1],
-        }
         n_tiers = len(self.ex.stats.tiers_used)
-        logits, kv_slot, _ = self.ex.prefill(tokens, kv=kv_slot)
-        self.kv["k"] = self.kv["k"].at[:, slot:slot + 1].set(kv_slot["k"])
-        self.kv["v"] = self.kv["v"].at[:, slot:slot + 1].set(kv_slot["v"])
+        if self._paged:
+            # paged admission maps pages instead of slicing the slot; the
+            # prefix-cache lookup runs inside executor.prefill
+            logits, _, _ = self.ex.prefill(tokens, kv=self.kv, slot=slot)
+        elif self.ex.engine is not None \
+                and self.ex.prefill_mode == "layer_major":
+            # slot-threaded donated path (DESIGN.md §12): the jitted step
+            # slices and writes the slot row in place of the old
+            # serving-side `.at[:, slot:slot+1].set(...)`, which
+            # materialised a full-cache copy per admission
+            logits, self.kv, _ = self.ex.prefill(tokens, kv=self.kv,
+                                                 slot=slot)
+        else:
+            # chunk-major / eager baseline: slice the slot out and back
+            kv_slot = {
+                "k": self.kv["k"][:, slot:slot + 1],
+                "v": self.kv["v"][:, slot:slot + 1],
+            }
+            logits, kv_slot, _ = self.ex.prefill(tokens, kv=kv_slot)
+            self.kv["k"] = self.kv["k"].at[:, slot:slot + 1].set(kv_slot["k"])
+            self.kv["v"] = self.kv["v"].at[:, slot:slot + 1].set(kv_slot["v"])
         self.tier_log.extend(self.ex.stats.tiers_used[n_tiers:])
         nxt = int(greedy_token(logits[0, -1]))
         req.generated.append(nxt)
@@ -232,6 +261,10 @@ class ContinuousBatcher:
         req.done_at = time.perf_counter()
         self.completed.append(req)
         self.slots[slot] = None
+        if self._paged:
+            # unmap the sequence's pages; prefix-cached blocks survive
+            # through the cache's own reference (DESIGN.md §12)
+            self.kv.free_slot(slot)
 
     # ------------------------------------------------------------ decode
     def _decode_iteration(self):
@@ -329,8 +362,9 @@ class ContinuousBatcher:
         iters = self.iter_streamed_bytes
         total_generated = sum(len(r.generated) for r in done) \
             + sum(len(r.generated) for r in self.slots if r is not None)
-        return {
+        out = {
             "iterations": self.iterations,
+            "kv_layout": self.ex.kv_layout,
             "tiers_used": sorted(set(self.tier_log)),
             "streamed_bytes": self.ex.stats.streamed_bytes,
             "streamed_bytes_by_dtype":
@@ -367,3 +401,10 @@ class ContinuousBatcher:
             "demanded_expert_bytes": self.ex.stats.demanded_expert_bytes,
             "resident_expert_bytes": self.ex.stats.resident_expert_bytes,
         }
+        if self._paged:
+            # paged-KV serving (DESIGN.md §12): pool residency, fault /
+            # eviction traffic and prefix-cache hits for this batch
+            out["paged_kv"] = self.kv.stats_dict()
+            out["page_faults"] = self.ex.stats.page_faults
+            out["demanded_page_bytes"] = self.ex.stats.demanded_page_bytes
+        return out

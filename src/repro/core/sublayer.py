@@ -20,7 +20,11 @@ from dataclasses import dataclass, field
 from typing import List, Tuple
 
 PRIORITY = {"attn": 0, "kv": 1, "mamba": 2, "ffn": 2, "moe": 2, "out": 3,
-            "embed": 3, "vision": 1, "moe_router": 0, "moe_expert": 2}
+            "embed": 3, "vision": 1, "moe_router": 0, "moe_expert": 2,
+            # paged-KV block restores (DESIGN.md §12): synthetic demand-only
+            # shards the executor fabricates per fault — never planned, so
+            # they share the kv pin priority but stay out of STREAMABLE_KINDS
+            "kv_page": 1}
 
 # Kinds the executor can stream into the VRAM scratch (weights copied
 # just-in-time). Everything else is either resident-by-construction (embed,
@@ -142,7 +146,7 @@ class SubLayer:
         if self.kind == "embed":
             d = m["d"]
             return [Kernel("elementwise", (t, d), t * d, 3.0 * t * d)]
-        if self.kind == "kv":
+        if self.kind in ("kv", "kv_page"):
             return []  # no compute; KV bytes ride the attention kernel
         if self.kind == "vision":
             # ViT-ish block cost handled by vlmopt; treat as ffn-like here

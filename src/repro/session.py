@@ -38,6 +38,8 @@ from repro.core import (SYSTEMS, InferenceSetting, PipelinedExecutor,
                         Schedule, ScheduleDiff, SystemConfig, TimingEstimator,
                         build_graph, build_schedule, estimate_tps,
                         estimate_ttft, run_install)
+from repro.core.costmodel import kv_block_bytes
+from repro.core.kvpaged import PAGE_SIZE
 from repro.core.planner import TIERS
 from repro.core.serving import ContinuousBatcher, Request
 from repro.models import build_model
@@ -54,7 +56,10 @@ class Session:
                  overlap: bool = True, jit_engine: bool = True,
                  quick_install: bool = True,
                  expert_granular: Optional[bool] = None,
-                 prefill_mode: Optional[str] = None):
+                 prefill_mode: Optional[str] = None,
+                 kv_layout: Optional[str] = None,
+                 kv_page_size: Optional[int] = None,
+                 kv_pool_pages: Optional[int] = None):
         self.cfg = cfg
         self.system = system
         self.setting = setting
@@ -74,6 +79,18 @@ class Session:
             raise ValueError("prefill_mode='layer_major' requires the "
                              "jitted engine (jit_engine=True)")
         self.prefill_mode = prefill_mode
+        # paged KV cache (DESIGN.md §12): "paged" swaps the stacked
+        # (L,B,KV,S,hd) cache for the page-pool layout with LRU eviction and
+        # prefix reuse. Same raise-early contract as the knobs above; an
+        # unhonourable explicit choice fails at open(), not at first use.
+        if kv_layout not in (None, "stacked", "paged"):
+            raise ValueError(f"unknown kv_layout {kv_layout!r}")
+        if kv_layout == "paged" and not jit_engine:
+            raise ValueError("kv_layout='paged' requires the jitted engine "
+                             "(jit_engine=True)")
+        self.kv_layout = kv_layout or "stacked"
+        self.kv_page_size = int(kv_page_size) if kv_page_size else None
+        self.kv_pool_pages = kv_pool_pages
         self.db = db if db is not None else run_install(system,
                                                         quick=quick_install)
         self.est = TimingEstimator(self.db, system)
@@ -99,8 +116,9 @@ class Session:
         self.subs = build_graph(cfg, wdtype=wdtype,
                                 expert_granular=self.expert_granular,
                                 routing=routing)
-        self.schedule: Schedule = build_schedule(budget_bytes, self.subs,
-                                                 self.est, setting, tiers)
+        self.schedule: Schedule = build_schedule(
+            budget_bytes, self.subs, self.est, setting, tiers,
+            kv_page_size=self.kv_page_size or PAGE_SIZE)
         self.replan_log: List[ScheduleDiff] = []
         self._params = params
         self._executor: Optional[PipelinedExecutor] = None
@@ -138,8 +156,26 @@ class Session:
             self._executor = PipelinedExecutor(
                 self.cfg, self.params, self.schedule, max_seq=self.max_seq,
                 overlap=self.overlap, jit_engine=self.jit_engine,
-                prefill_mode=self.prefill_mode)
+                prefill_mode=self.prefill_mode, kv_layout=self.kv_layout,
+                kv_page_size=self.kv_page_size,
+                kv_pool_pages=self._effective_kv_pool_pages())
         return self._executor
+
+    def _effective_kv_pool_pages(self) -> Optional[int]:
+        """Page-pool size the executor gets: an explicit ``kv_pool_pages``
+        wins; otherwise the planner's ``Schedule.kv_pool_bytes`` converted
+        to pages (DESIGN.md §12). ``None`` (stacked layout, or a graph with
+        no kv subs) leaves the executor's ample never-evicting default."""
+        if self.kv_pool_pages is not None or self.kv_layout != "paged":
+            return self.kv_pool_pages
+        if self.schedule.kv_pool_bytes <= 0:
+            return None
+        kv_subs = [s for s in self.subs if s.kind == "kv"]
+        if not kv_subs:
+            return None
+        block = max(kv_block_bytes(s, self.schedule.kv_page_size)
+                    for s in kv_subs)
+        return max(1, self.schedule.kv_pool_bytes // block)
 
     def batcher(self, max_batch: Optional[int] = None,
                 fused: Optional[bool] = None) -> ContinuousBatcher:
@@ -229,7 +265,8 @@ class Session:
             self.setting = setting
         self._refresh_routing_stats()
         new = build_schedule(self.budget_bytes, self.subs, self.est,
-                             self.setting, self.tiers)
+                             self.setting, self.tiers,
+                             kv_page_size=self.kv_page_size or PAGE_SIZE)
         diff = self.schedule.diff(new)
         if self._executor is not None:
             report = self._executor.rebind(new)
@@ -250,16 +287,24 @@ class Session:
         return resolve_prefill_mode(self.prefill_mode, self.jit_engine)
 
     # ------------------------------------------------------------ estimates
-    def estimates(self, isl: Optional[int] = None) -> dict:
+    def estimates(self, isl: Optional[int] = None,
+                  prefix_hit_frac: float = 0.0) -> dict:
         """Planner-side TTFT/TPS estimates for the bound conditions. The
         TTFT model follows the session's prefill mode — a chunk-major
-        session must not advertise the layer-major 1x-stream TTFT."""
+        session must not advertise the layer-major 1x-stream TTFT.
+        ``prefix_hit_frac`` feeds the paged prefix-cache term of the TTFT
+        model (DESIGN.md §12); it only makes sense on a paged session."""
+        if prefix_hit_frac and self.kv_layout != "paged":
+            raise ValueError("prefix_hit_frac needs kv_layout='paged' — the "
+                             "stacked cache has no prefix cache")
         isl = isl if isl is not None else self.setting.context
         return {"ttft_s": estimate_ttft(self.schedule, isl,
-                                        mode=self.effective_prefill_mode),
+                                        mode=self.effective_prefill_mode,
+                                        prefix_hit_frac=prefix_hit_frac),
                 "tps": estimate_tps(self.schedule, self.setting.batch),
                 "pinned_bytes": self.schedule.pinned_bytes,
-                "scratch_bytes": self.schedule.scratch_bytes}
+                "scratch_bytes": self.schedule.scratch_bytes,
+                "kv_pool_bytes": self.schedule.kv_pool_bytes}
 
     def stats(self) -> dict:
         """Lifecycle stats: planning + (if built) executor + batcher."""
@@ -268,7 +313,9 @@ class Session:
                "replans": len(self.replan_log),
                "weight_quant": self.cfg.weight_quant,
                "pinned_bytes": self.schedule.pinned_bytes,
-               "scratch_bytes": self.schedule.scratch_bytes}
+               "scratch_bytes": self.schedule.scratch_bytes,
+               "kv_layout": self.kv_layout,
+               "kv_pool_bytes": self.schedule.kv_pool_bytes}
         if self._executor is not None:
             ex = self._executor.stats
             pf = ex.prefill_stats
@@ -308,6 +355,13 @@ class Session:
                     "expert_demanded": ex.expert_demanded,
                     "demanded_expert_bytes": ex.demanded_expert_bytes,
                     "resident_expert_bytes": ex.resident_expert_bytes,
+                })
+            if self.kv_layout == "paged":
+                # page restores are the second demand-streamable shard kind
+                # beside cold experts (DESIGN.md §12); same ledger bucket
+                out["executor"].update({
+                    "page_faults": ex.page_faults,
+                    "demanded_page_bytes": ex.demanded_page_bytes,
                 })
         if self._batcher is not None:
             out["serving"] = self._batcher.stats()

@@ -1,0 +1,349 @@
+"""Paged-KV conformance suite (DESIGN.md §12).
+
+The paged cache is a *layout* change: every test here pins the same
+contract — paged decode/prefill must be bit-identical to the stacked
+baseline — while varying what the page machinery is doing underneath
+(ample pool, forced eviction + demand restore mid-decode, prefix-cache
+hits, overlap on/off, mid-serve rebudget rebinds), and then audits the
+byte ledger: demanded page bytes are exactly the evicted-then-touched
+bytes, and they land in the ``streamed == plan + demanded`` accounting
+as their own ``kv`` bucket.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import Session
+from repro.configs import get_smoke_config
+from repro.core import (CLI2, InferenceSetting, TimingEstimator, build_graph,
+                        build_schedule, estimate_ttft, run_install)
+from repro.core.kvpaged import PageAllocator, PagedKVCache, PagePoolFull
+from repro.core.serving import ContinuousBatcher, Request
+from repro.models import build_model
+
+# the forced-eviction pool: smaller than the live block set of every arch
+# below (2 layers x 2 slots x up-to-2 blocks), so decode keeps evicting and
+# demand-restoring, but >= one layer's pinned working set, so passes finish
+TINY_POOL = 4
+
+ARCHES = [("yi-9b", False), ("qwen30b-a3b", False), ("qwen30b-a3b", True)]
+
+
+@pytest.fixture(scope="module")
+def db():
+    return run_install(CLI2, quick=True)
+
+
+@pytest.fixture(scope="module")
+def built(db):
+    """Per-(arch, expert_granular) build cache: config, params, schedule,
+    and the stacked-serving reference generations for the standard
+    staggered request set."""
+    cache = {}
+
+    def get(arch, eg=False):
+        if (arch, eg) not in cache:
+            cfg = get_smoke_config(arch)
+            params = build_model(cfg).init(jax.random.PRNGKey(0))
+            subs = build_graph(cfg, wdtype=2, expert_granular=eg)
+            budget = int(sum(s.weight_bytes for s in subs) * 0.2) + 1
+            sched = build_schedule(budget, subs, TimingEstimator(db, CLI2),
+                                   InferenceSetting(batch=2, context=64))
+            reqs = staggered_requests(cfg)
+            b = ContinuousBatcher(cfg, params, sched, max_batch=2,
+                                  max_seq=64, fused=True)
+            b.serve(reqs)
+            ref = [r.generated for r in reqs]
+            cache[arch, eg] = (cfg, params, sched, ref)
+        return cache[arch, eg]
+
+    return get
+
+
+def staggered_requests(cfg, n=5, base_len=6, max_new=4):
+    """Different prompt lengths -> slots at different cache positions;
+    n > max_batch staggers admissions across iterations."""
+    rng = np.random.RandomState(0)
+    return [Request(rid=i,
+                    prompt=rng.randint(0, cfg.vocab, size=base_len + 3 * i)
+                    .astype(np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def serve_paged(cfg, params, sched, reqs, **kw):
+    kw.setdefault("max_batch", 2)
+    b = ContinuousBatcher(cfg, params, sched, max_seq=64, fused=True,
+                          kv_layout="paged", **kw)
+    b.serve(reqs)
+    return b
+
+
+# ------------------------------------------------------------ bit-identity
+@pytest.mark.parametrize("arch,eg", ARCHES)
+def test_paged_ample_pool_bit_identical(arch, eg, built):
+    """Default pool (full stacked demand) never evicts: paged is a pure
+    layout change, token-for-token equal across dense, monolithic-MoE and
+    expert-granular serving with staggered admissions."""
+    cfg, params, sched, ref = built(arch, eg)
+    reqs = staggered_requests(cfg)
+    b = serve_paged(cfg, params, sched, reqs)
+    assert [r.generated for r in reqs] == ref
+    st = b.stats()["paged_kv"]
+    assert st["evictions"] == 0 and st["page_faults"] == 0
+    # the paged engine steps actually ran (this wasn't stacked in disguise)
+    traces = dict(b.ex.engine.trace_counts)
+    assert traces.get("attn_decode_paged", 0) >= 1
+    assert traces.get("attn_prefill_paged", 0) >= 1
+
+
+@pytest.mark.parametrize("arch,eg", ARCHES)
+def test_paged_forced_eviction_bit_identical(arch, eg, built):
+    """A pool far below the live block set forces LRU eviction to host and
+    demand stream-back mid-decode — numerics must not move, and the page
+    ledger must balance exactly: every demanded byte is a previously
+    evicted block being touched again."""
+    cfg, params, sched, ref = built(arch, eg)
+    reqs = staggered_requests(cfg)
+    b = serve_paged(cfg, params, sched, reqs, kv_pool_pages=TINY_POOL)
+    assert [r.generated for r in reqs] == ref
+    kv = b.kv
+    st = b.stats()["paged_kv"]
+    assert st["evictions"] > 0, "tiny pool never evicted"
+    assert st["page_faults"] > 0, "evicted pages were never demanded back"
+    # exact page-byte accounting (DESIGN.md §12)
+    assert st["page_faults"] == kv.alloc.restores
+    assert st["demanded_page_bytes"] == st["page_faults"] * kv.block_bytes
+    assert st["evicted_page_bytes"] == st["evictions"] * kv.block_bytes
+    # a restore needs a host copy, i.e. a prior write-back eviction
+    assert kv.alloc.restores <= kv.alloc.evictions
+
+
+def test_paged_overlap_off_bit_identical(built):
+    """overlap=False drops the prefetch engine entirely — restores take
+    the synchronous at-use path — and must still be bit-identical under
+    forced eviction."""
+    cfg, params, sched, _ = built("yi-9b")
+    reqs_s = staggered_requests(cfg)
+    reqs_p = staggered_requests(cfg)
+    bs = ContinuousBatcher(cfg, params, sched, max_batch=2, max_seq=64,
+                           fused=True, overlap=False)
+    bs.serve(reqs_s)
+    bp = serve_paged(cfg, params, sched, reqs_p, kv_pool_pages=TINY_POOL,
+                     overlap=False)
+    for a, b in zip(reqs_s, reqs_p):
+        assert a.generated == b.generated, (a.rid, a.generated, b.generated)
+    assert bp.stats()["paged_kv"]["evictions"] > 0
+
+
+def test_paged_across_mid_serve_rebudget(built, db):
+    """Pause a paged serve with in-flight slots, halve the budget (live
+    executor rebind), drain — tokens must equal an uninterrupted stacked
+    run at the final budget. The rebind swaps pinned weights only; the
+    page pool and table survive untouched."""
+    cfg, params, _, _ = built("yi-9b")
+    total = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+
+    def open_s(frac, **kw):
+        return Session.open(cfg, CLI2, int(total * frac) + 1,
+                            InferenceSetting(batch=2, context=64),
+                            db=db, max_seq=64, **kw)
+
+    def reqs(n=2, max_new=8):
+        rng = np.random.RandomState(0)
+        return [Request(rid=i,
+                        prompt=rng.randint(0, cfg.vocab, size=6 + 3 * i)
+                        .astype(np.int32), max_new_tokens=max_new)
+                for i in range(n)]
+
+    live = open_s(2.0, kv_layout="paged")
+    a = reqs()
+    live.serve(a, max_batch=2, max_iterations=2)
+    assert any(sl is not None for sl in live.batcher().slots), \
+        "fixture bug: no in-flight slots at the swap point"
+    kv = live.batcher().kv
+    assert isinstance(kv, PagedKVCache)
+    diff = live.update_budget(int(total * 1.0) + 1)
+    assert diff.to_evict, "fixture bug: budget step did not change pins"
+    live.serve([])
+    assert live.batcher().kv is kv, "rebind rebuilt the page pool"
+
+    fresh = open_s(1.0)
+    b = reqs()
+    fresh.serve(b, max_batch=2)
+    for x, y in zip(a, b):
+        assert x.generated == y.generated, \
+            f"req {x.rid}: {x.generated} != {y.generated} across rebudget"
+    # session stats surface the paged counters
+    st = live.stats()
+    assert st["kv_layout"] == "paged"
+    assert "paged_kv" in st["serving"]
+    assert "page_faults" in st["executor"]
+
+
+# ------------------------------------------------------------ prefix cache
+def test_prefix_hit_bit_identical_with_exact_counters(built):
+    """Admissions sharing a 32-token (= 2 full blocks) system prompt: the
+    2nd and 3rd map the cached blocks instead of prefilling them —
+    counters must say exactly that (2 hits x 2 blocks), and the tokens
+    must equal the stacked cold-prefill run."""
+    cfg, params, sched, _ = built("yi-9b")
+    rng = np.random.RandomState(3)
+    shared = rng.randint(0, cfg.vocab, size=32).astype(np.int32)
+
+    def reqs(seed):
+        r = np.random.RandomState(seed)
+        return [Request(rid=i,
+                        prompt=np.concatenate(
+                            [shared,
+                             r.randint(0, cfg.vocab, size=5 + i)
+                             .astype(np.int32)]),
+                        max_new_tokens=3)
+                for i in range(3)]
+
+    cold = reqs(4)
+    bs = ContinuousBatcher(cfg, params, sched, max_batch=1, max_seq=64,
+                           fused=True)
+    bs.serve(cold)
+    warm = reqs(4)
+    bp = serve_paged(cfg, params, sched, warm, max_batch=1)
+    for a, b in zip(cold, warm):
+        assert a.generated == b.generated, (a.rid, a.generated, b.generated)
+    st = bp.stats()["paged_kv"]
+    assert st["prefix_queries"] == 3
+    assert st["prefix_hits"] == 2, st
+    assert st["prefix_hit_blocks"] == 2 * (len(shared) // st["page_size"]), st
+    assert st["cow_copies"] == 0  # full-block sharing never triggers COW
+
+
+# ------------------------------------------------------------ byte ledger
+def test_page_demand_joins_streaming_ledger(built):
+    """Pages are the second demand-streamable shard kind beside cold
+    experts (DESIGN.md §9/§12): demanded page bytes ride the prefetch
+    demand pool and land in ``streamed_bytes`` under their own ``kv``
+    dtype bucket, keeping ``streamed == static plan + demanded experts +
+    demanded pages`` exact."""
+    cfg, params, sched, ref = built("qwen30b-a3b", True)
+    reqs = staggered_requests(cfg)
+    b = serve_paged(cfg, params, sched, reqs, kv_pool_pages=TINY_POOL)
+    assert [r.generated for r in reqs] == ref
+    ex = b.ex.stats
+    assert ex.demanded_page_bytes > 0 and ex.demanded_expert_bytes > 0
+    assert ex.streamed_bytes_by_dtype.get("kv", 0) == ex.demanded_page_bytes
+    static = ex.streamed_bytes - ex.demanded_expert_bytes \
+        - ex.demanded_page_bytes
+    assert static >= 0
+    # demand-pool composition: page restores went through the prefetch
+    # demand worker (not all faults must — stragglers restore sync)
+    pf = b.ex.prefetch.stats
+    assert 1 <= pf.demanded_pages <= ex.page_faults
+
+
+# ------------------------------------------------------------ planner
+def test_planner_sizes_pool_and_prices_prefix_hits(built, db):
+    """KV page-pool sizing joins the tier table, and ``estimate_ttft``'s
+    prefix-hit term prices exactly the uncovered suffix."""
+    cfg, params, sched, _ = built("yi-9b")
+    assert sched.kv_page_size == 16
+    setting = InferenceSetting(batch=2, context=64)
+    kv_subs = [s for s in build_graph(cfg, wdtype=2) if s.kind == "kv"]
+    block = max(s.kv_bytes_per_token for s in kv_subs) * sched.kv_page_size
+    floor = (2 * setting.batch * (setting.context // sched.kv_page_size)
+             + 1) * block
+    assert sched.kv_pool_bytes >= floor
+    # a 50% prefix hit halves the effective prompt
+    assert estimate_ttft(sched, 64, mode="chunk_major",
+                         prefix_hit_frac=0.5) \
+        == estimate_ttft(sched, 32, mode="chunk_major")
+    assert estimate_ttft(sched, 64, prefix_hit_frac=0.5) \
+        <= estimate_ttft(sched, 64)
+    with pytest.raises(ValueError, match="prefix_hit_frac"):
+        estimate_ttft(sched, 64, prefix_hit_frac=1.5)
+
+
+# ------------------------------------------------------------ slot writes
+def test_stacked_slot_prefill_routes_through_engine(built):
+    """Regression (satellite): fused stacked admission used to prefill
+    into a detached cache and merge it with a whole-cache
+    ``.at[:, slot:slot+1].set`` copy. It must route through the engine's
+    donated slot-write step instead — visible as ``attn_prefill_slot``
+    engine traffic on a jitted stacked batcher."""
+    cfg, params, sched, ref = built("yi-9b")
+    reqs = staggered_requests(cfg)
+    b = ContinuousBatcher(cfg, params, sched, max_batch=2, max_seq=64,
+                          fused=True)
+    b.serve(reqs)
+    assert [r.generated for r in reqs] == ref
+    traces = dict(b.ex.engine.trace_counts)
+    assert traces.get("attn_prefill_slot", 0) >= 1, \
+        "slot admission bypassed the donated slot-write engine step"
+    # admissions at different lengths/slots reuse the traced executables
+    b.serve(staggered_requests(cfg))
+    assert dict(b.ex.engine.trace_counts) == traces, \
+        "slot prefill re-traced across admissions"
+
+
+# ------------------------------------------------------------ failure modes
+def test_pool_below_working_set_raises(built):
+    """A pool smaller than ONE layer's pinned working set cannot make
+    progress; the allocator must fail loudly (PagePoolFull names the
+    knob), not live-lock or corrupt."""
+    cfg, params, sched, _ = built("yi-9b")
+    reqs = staggered_requests(cfg, n=2, base_len=20)
+    with pytest.raises(PagePoolFull):
+        serve_paged(cfg, params, sched, reqs, kv_pool_pages=1)
+
+
+def test_kv_layout_knob_validation(built):
+    cfg, params, sched, _ = built("yi-9b")
+    with pytest.raises(ValueError, match="kv_layout"):
+        ContinuousBatcher(cfg, params, sched, max_batch=2, max_seq=64,
+                          kv_layout="ring")
+    with pytest.raises(ValueError, match="jit"):
+        ContinuousBatcher(cfg, params, sched, max_batch=2, max_seq=64,
+                          jit_engine=False, kv_layout="paged")
+
+
+# ------------------------------------------------------------ allocator
+def test_allocator_seeded_ops_driver():
+    """Non-hypothesis twin of the property tests (always runs, any env):
+    a seeded random alloc/free/evict/restore storm with per-op invariant
+    checks, then a full drain back to an empty, whole pool."""
+    rng = np.random.RandomState(0)
+    for n_pages in (2, 3, 5, 9):
+        alloc = PageAllocator(n_pages)
+        live = []
+        for _ in range(400):
+            op = rng.randint(0, 8)
+            bid = live[rng.randint(0, len(live))] if live else None
+            try:
+                if op == 0:
+                    live.append(alloc.new_block())
+                elif bid is None:
+                    pass
+                elif op == 1:
+                    alloc.retain(bid)
+                elif op == 2:
+                    if alloc.release(bid):
+                        live.remove(bid)
+                elif op == 3:
+                    alloc.touch(bid)
+                elif op == 4:
+                    alloc.mark_dirty(bid)
+                elif op == 5:
+                    alloc.pin([bid])
+                elif op == 6:
+                    alloc.unpin([bid])
+                elif op == 7:
+                    alloc.ensure_resident([bid])
+            except PagePoolFull:
+                pass  # legal when everything is pinned — never corruption
+            alloc.check()
+        assert alloc.evictions >= alloc.restores
+        for bid in list(live):
+            alloc.unpin([bid])
+            while bid in alloc.blocks:
+                alloc.release(bid)
+            alloc.check()
+        assert not alloc.blocks and not alloc.by_pid
+        assert sorted(alloc.free) == list(range(1, n_pages))
