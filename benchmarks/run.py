@@ -10,15 +10,16 @@ import sys
 import time
 
 from benchmarks import (bench_figure2, bench_figure3, bench_figure4,
-                        bench_figure5, bench_figure6, bench_kv_paged,
-                        bench_moe_experts, bench_oracle, bench_overlap,
-                        bench_prefill, bench_quant_stream, bench_rebudget,
-                        bench_serving, bench_table4, bench_table5,
-                        bench_table8, bench_table9, roofline)
+                        bench_figure5, bench_figure6, bench_gateway,
+                        bench_kv_paged, bench_moe_experts, bench_oracle,
+                        bench_overlap, bench_prefill, bench_quant_stream,
+                        bench_rebudget, bench_serving, bench_table4,
+                        bench_table5, bench_table8, bench_table9, roofline)
 
 SUITES = {
     "overlap": bench_overlap.run,
     "serving": bench_serving.run,
+    "gateway": bench_gateway.run,
     "rebudget": bench_rebudget.run,
     "moe_experts": bench_moe_experts.run,
     "prefill": bench_prefill.run,

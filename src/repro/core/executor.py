@@ -141,6 +141,12 @@ class PipelinedExecutor:
             raise ValueError("prefill_mode='layer_major' requires the "
                              "jitted engine (jit_engine=True)")
         self.prefill_mode = prefill_mode
+        # live queue-pressure hints (DESIGN.md §13): the serving layer sets
+        # these before a pass so the tier picks anticipate the imminent
+        # batch (admission bursts) and respect deadline slack; the defaults
+        # keep every pick identical to the queue-blind baseline
+        self.sched_queue_depth = 0
+        self.sched_slack_s: float | None = None
         self.policy = NoPolicy()
         self.stats = ExecStats()
         self._sync_exposed = 0.0
@@ -754,7 +760,9 @@ class PipelinedExecutor:
             page_demand = kv.block_bytes if faults else 0
             self._active_kvcache = kv
         by_name, streaming, started = self._begin_pass(
-            self.schedule.pick_decode_tier(n_active),
+            self.schedule.pick_decode_tier(
+                n_active, queue_depth=self.sched_queue_depth,
+                slack_s=self.sched_slack_s),
             page_demand_bytes=page_demand)
         page_stream = paged and started and self._demand_active
         streamed_before = self.stats.streamed_bytes
@@ -874,8 +882,9 @@ class PipelinedExecutor:
             page_demand = kv.block_bytes if faults else 0
             self._active_kvcache = kv
         if mode == "layer_major":
-            tier = self.schedule.pick_prefill_tier(B * (T - pos0),
-                                                   min_tier=B)
+            tier = self.schedule.pick_prefill_tier(
+                B * (T - pos0), min_tier=B,
+                queue_depth=self.sched_queue_depth)
         else:
             tier = self.schedule.pick_tier(B * T)
         if tier // B < 1:

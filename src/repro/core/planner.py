@@ -118,12 +118,30 @@ class Schedule:
                 best, best_cost = t, cost
         return best
 
-    def pick_decode_tier(self, active_slots: int) -> int:
+    def pick_decode_tier(self, active_slots: int, queue_depth: int = 0,
+                         slack_s: Optional[float] = None) -> int:
         """Tier for one fused decode iteration: the batch-wide new-token
         count is one token per active slot (paper: PickTier runs over the
         whole batch, never per request), so the iteration's plan is the one
-        picked for ``active_slots`` tokens. See DESIGN.md §7."""
-        return self.pick_tier(max(1, active_slots))
+        picked for ``active_slots`` tokens. See DESIGN.md §7.
+
+        ``queue_depth`` makes the pick *queue-aware* (DESIGN.md §13): the
+        caller passes how many queued admissions can actually join the
+        batch (capped at its free slots), and the tier is picked for that
+        imminent batch instead of the current one — an admission burst
+        steps up to the larger tier one iteration early, and an idle queue
+        leaves the pick exactly as before. ``slack_s`` is the tightest
+        deadline slack across live requests: when the anticipated tier's
+        iteration time would overrun it, the anticipation is vetoed and
+        the fastest plan for the *current* tokens wins — latency-critical
+        iterations never pay burst-sized padding."""
+        tokens = max(1, active_slots)
+        anticipated = tokens + max(0, queue_depth)
+        t = self.pick_tier(anticipated)
+        if slack_s is not None and anticipated > tokens \
+                and self.tiers[t].est_time > slack_s:
+            return self.pick_tier(tokens)
+        return t
 
     def prefill_time(self, batch_tokens: int, tier: int) -> float:
         """Layer-major weight-stationary prefill cost at ``tier``
@@ -136,17 +154,26 @@ class Schedule:
         chunks = math.ceil(batch_tokens / tier)
         return max(e.est_time, chunks * e.prefill_chunk_s)
 
-    def pick_prefill_tier(self, batch_tokens: int, min_tier: int = 1) -> int:
+    def pick_prefill_tier(self, batch_tokens: int, min_tier: int = 1,
+                          queue_depth: int = 0) -> int:
         """Chunk-size pick for layer-major prefill. Re-streaming no longer
         penalises small chunks (the transfer term is per-prompt, not
         per-chunk), so the optimum usually sits at a smaller tier — less
         scratch, less padding — than ``pick_tier``'s, which pays the plan's
         streamed bytes every chunk. ``min_tier`` floors the pick (the
         executor needs ``tier >= batch`` for at least one token per
-        sequence per chunk); ties break toward the smaller tier."""
+        sequence per chunk); ties break toward the smaller tier.
+
+        ``queue_depth`` raises that floor to the *imminent* batch
+        (DESIGN.md §13): queued admissions will have joined the decode
+        batch by the time this chunk executable repeats, and the executor
+        needs ``tier >= batch``, so picking for the current batch alone
+        would choose a chunking the very next admission outgrows. Idle
+        queues leave the floor — and therefore the pick — untouched."""
         best, best_cost = None, float("inf")
+        floor = min_tier + max(0, queue_depth)
         for t in sorted(self.tiers):
-            if t < min_tier:
+            if t < floor:
                 continue
             cost = self.prefill_time(batch_tokens, t)
             if cost < best_cost:

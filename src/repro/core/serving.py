@@ -43,15 +43,35 @@ class Request:
     generated: list = field(default_factory=list)
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
+    cancelled_at: Optional[float] = None
     pos: int = 0
 
     @property
-    def ttft(self):
-        return (self.first_token_at or 0) - self.submitted_at
+    def ttft(self) -> Optional[float]:
+        """Time to first token, or ``None`` while no token has been
+        emitted yet (the old ``(first_token_at or 0) - submitted_at``
+        returned a large negative number for unstarted requests, which
+        silently poisoned any mean over a mixed wave)."""
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
 
     @property
     def done(self):
         return len(self.generated) >= self.max_new_tokens
+
+
+@dataclass
+class TokenEvent:
+    """One token emitted by one serve iteration (DESIGN.md §13): what an
+    incremental caller — the gateway's SSE fan-out — receives from
+    ``ContinuousBatcher.step()`` instead of waiting for the batch to
+    finish. ``index`` is the token's position in ``request.generated``;
+    ``done`` marks the request's final token (its slot is already free)."""
+    rid: int
+    token: int
+    index: int
+    done: bool
 
 
 def random_requests(vocab: int, n: int, prompt_len: int,
@@ -132,6 +152,16 @@ class ContinuousBatcher:
         # slot, and the resume call — serve([]) after a rebudget — must
         # still admit them
         self.pending: List[Request] = []
+        # per-step emitted tokens (DESIGN.md §13): _prefill_slot/_advance
+        # append here; step() drains the buffer to its caller
+        self._events: List[TokenEvent] = []
+        self.cancelled: List[Request] = []
+        # live queue-pressure hints for the tier picks (DESIGN.md §13):
+        # off until set_queue_pressure opts in — the default serve path
+        # keeps every pick byte-identical to the queue-blind baseline
+        self._queue_aware = False
+        self._queue_depth = 0
+        self._slack_s: Optional[float] = None
         self.last_tokens = jnp.zeros((max_batch, 1), jnp.int32)
         self.iterations = 0
         self.tier_log = []
@@ -234,6 +264,8 @@ class ContinuousBatcher:
         req.first_token_at = time.perf_counter()
         req.pos = T
         self.last_tokens = self.last_tokens.at[slot, 0].set(nxt)
+        self._events.append(TokenEvent(req.rid, nxt, len(req.generated) - 1,
+                                       req.done))
         # a request whose budget is a single token finishes on its prefill
         # token: retire it here so its slot frees immediately and done_at is
         # recorded exactly like a decode-phase completion
@@ -292,7 +324,9 @@ class ContinuousBatcher:
         for i in active:
             pos_vec[i] = self.slots[i].pos
             mask[i] = True
-        self.tier_log.append(self.schedule.pick_decode_tier(len(active)))
+        self.tier_log.append(self.schedule.pick_decode_tier(
+            len(active), queue_depth=self.ex.sched_queue_depth,
+            slack_s=self.ex.sched_slack_s))
         logits, self.kv = self.ex._run_decode(
             self.last_tokens, self.kv, jnp.asarray(pos_vec),
             jnp.asarray(mask), n_active=len(active))
@@ -324,7 +358,9 @@ class ContinuousBatcher:
         for i in active:
             mask = np.zeros((self.max_batch,), bool)
             mask[i] = True
-            self.tier_log.append(self.schedule.pick_decode_tier(1))
+            self.tier_log.append(self.schedule.pick_decode_tier(
+                1, queue_depth=self.ex.sched_queue_depth,
+                slack_s=self.ex.sched_slack_s))
             logits, self.kv = self.ex._run_decode(
                 self.last_tokens, self.kv, pos_vec, jnp.asarray(mask),
                 n_active=1)
@@ -335,10 +371,98 @@ class ContinuousBatcher:
         req.generated.append(token)
         req.pos += 1
         self.last_tokens = self.last_tokens.at[slot, 0].set(token)
+        self._events.append(TokenEvent(req.rid, token,
+                                       len(req.generated) - 1, req.done))
         if req.done:
             self._retire(slot)
 
     # ------------------------------------------------------------ loop
+    @property
+    def has_work(self) -> bool:
+        """True while a step would make progress (queued or in-flight)."""
+        return bool(self.pending) or any(s is not None for s in self.slots)
+
+    def submit(self, requests: List[Request]):
+        """Queue requests for admission by the next step (the incremental
+        caller's entry point; ``serve`` does this + loops)."""
+        self.pending.extend(requests)
+
+    def step(self) -> List[TokenEvent]:
+        """ONE serve iteration — admit into free slots, run one fused
+        decode pass — and return the tokens it emitted, per slot
+        (DESIGN.md §13). ``serve()`` is a loop over this, bit-identically:
+        an incremental caller (the gateway) interleaving other work
+        between steps sees exactly the token sequences a blocking
+        ``serve()`` would have produced, it just observes them per
+        iteration instead of at batch completion."""
+        self._events = []
+        t0 = time.perf_counter()
+        if self._queue_aware:
+            self._apply_queue_hints(admitting=True)
+        self._admit(self.pending)
+        if self._queue_aware:
+            self._apply_queue_hints(admitting=False)
+        self._decode_iteration()
+        self.iterations += 1
+        self._serve_wall_s += time.perf_counter() - t0
+        return self._events
+
+    def cancel(self, rid: int) -> Optional[str]:
+        """Abandon a request mid-flight (client disconnect, DESIGN.md §13):
+        a queued request leaves ``pending``; an in-flight one is retired
+        WITHOUT a completion — its slot frees this instant and, under the
+        paged layout, its non-shared KV blocks are deref'd so the pool
+        space returns (prefix-cached blocks survive through the cache's
+        own reference). Other slots are untouched: their KV rows and
+        positions never move, so their remaining tokens are bit-identical
+        to an undisturbed run. Returns "queued"/"active", or ``None`` when
+        the rid is unknown (already completed or never submitted)."""
+        for i, r in enumerate(self.pending):
+            if r.rid == rid:
+                self.pending.pop(i)
+                r.cancelled_at = time.perf_counter()
+                self.cancelled.append(r)
+                return "queued"
+        for slot, r in enumerate(self.slots):
+            if r is not None and r.rid == rid:
+                r.cancelled_at = time.perf_counter()
+                self.slots[slot] = None
+                if self._paged:
+                    self.kv.free_slot(slot)
+                self.cancelled.append(r)
+                return "active"
+        return None
+
+    def set_queue_pressure(self, depth: int = 0,
+                           slack_s: Optional[float] = None):
+        """Feed live queue depth / deadline slack into the tier picks
+        (DESIGN.md §13) and enable queue-aware scheduling for subsequent
+        steps. ``depth`` is the caller's admission-queue depth BEYOND
+        ``pending`` (the gateway broker's waiting line); ``slack_s`` the
+        tightest deadline slack across its live requests. Each step caps
+        the raw depth at what can actually join the batch (``max_batch``)
+        before it reaches ``Schedule.pick_decode_tier`` /
+        ``pick_prefill_tier`` through the executor's hint fields, so
+        bursts step tiers up one iteration early and idle periods shrink
+        them back. Never calling this keeps every pick byte-identical to
+        the queue-blind baseline."""
+        self._queue_aware = True
+        self._queue_depth = max(0, depth)
+        self._slack_s = slack_s
+
+    def _apply_queue_hints(self, admitting: bool):
+        """Resolve the raw pressure into the executor's hint fields at the
+        two moments a step picks tiers. Before admissions the hint raises
+        the prefill-tier floor to the imminent batch (executor floors at
+        B=1 per admission); before the decode pass it is the extra rows
+        the imminent batch holds beyond the currently active ones."""
+        active = sum(1 for s in self.slots if s is not None)
+        imminent = min(active + len(self.pending) + self._queue_depth,
+                       self.max_batch)
+        self.ex.sched_queue_depth = max(0, imminent - (1 if admitting
+                                                       else active))
+        self.ex.sched_slack_s = self._slack_s
+
     def serve(self, requests: List[Request], max_iterations: int = 10_000):
         """Admit + decode until the queue drains or ``max_iterations``
         iterations *of this call* have run — relative, so a paused serve on
@@ -346,15 +470,10 @@ class ContinuousBatcher:
         ``serve([])`` and in-flight slots keep decoding. Requests that never
         reached a free slot before the pause stay in ``self.pending`` and
         are admitted by the resume call — a pause never drops work."""
-        self.pending.extend(requests)
+        self.submit(requests)
         start = self.iterations
-        t0 = time.perf_counter()
-        while (self.pending or any(s is not None for s in self.slots)) \
-                and self.iterations - start < max_iterations:
-            self._admit(self.pending)
-            self._decode_iteration()
-            self.iterations += 1
-        self._serve_wall_s += time.perf_counter() - t0
+        while self.has_work and self.iterations - start < max_iterations:
+            self.step()
         return requests
 
     def stats(self):
@@ -373,11 +492,16 @@ class ContinuousBatcher:
             # completion stats (satellite: serve() used to build-and-drop a
             # quadratic `done` list; the retire path now records these)
             "completed": len(done),
+            "cancelled": len(self.cancelled),
             "generated_tokens": total_generated,
             "wall_s": self._serve_wall_s,
             "aggregate_tps": total_generated / max(self._serve_wall_s, 1e-12),
-            "mean_ttft_s": (float(np.mean([r.ttft for r in done]))
-                            if done else 0.0),
+            # mean over requests that actually emitted a first token:
+            # unfinished/never-started ones report ttft None and are
+            # skipped instead of dragging the mean negative
+            "mean_ttft_s": (float(np.mean(
+                [r.ttft for r in done if r.ttft is not None]))
+                if any(r.ttft is not None for r in done) else 0.0),
             "mean_iter_streamed_bytes": (float(np.mean(iters))
                                          if iters else 0.0),
             "mean_iter_moved_bytes": (float(np.mean(self.iter_moved_bytes))

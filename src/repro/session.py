@@ -230,6 +230,13 @@ class Session:
         b = self.batcher(max_batch=max_batch, fused=fused)
         return b.serve(requests, max_iterations=max_iterations)
 
+    def gateway(self, **kw):
+        """An OpenAI-compatible async serving gateway over this session
+        (DESIGN.md §13). Keyword args pass through to ``Gateway`` —
+        admission queue bound, rate limits, queue-aware tier hints."""
+        from repro.gateway.server import Gateway   # avoid import cycle
+        return Gateway(session=self, **kw)
+
     # ------------------------------------------------------------ re-plan
     def update_budget(self, new_budget_bytes: int) -> ScheduleDiff:
         """Re-plan under a new VRAM/HBM budget and apply the delta live

@@ -1,0 +1,669 @@
+"""Serving-gateway conformance (DESIGN.md §13).
+
+Four layers, outside in: the OpenAI wire schema (status-code split,
+SSE framing), the broker's admission contracts (exact 429 counts, rate
+windows, starvation-free aging — driven by a fake clock), the incremental
+batcher surface (``step()``/``serve()`` equivalence, TokenEvent coverage,
+cancellation, TTFT accounting), and the full asyncio gateway over the
+in-process pipe transport: streamed waves bit-identical to a direct
+``ContinuousBatcher`` run, disconnect-cancellation that frees paged-KV
+blocks, ledger/metrics reconciliation, drain + rebudget over the wire.
+"""
+import asyncio
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import Session
+from repro.configs import get_smoke_config
+from repro.core import (CLI2, InferenceSetting, TimingEstimator, build_graph,
+                        build_schedule, run_install)
+from repro.core.planner import Plan, Schedule, TierEntry
+from repro.core.serving import ContinuousBatcher, Request
+from repro.gateway import (ChatRequest, Gateway, GatewayError, InprocClient,
+                           QueueFull, RateLimited, RequestBroker,
+                           encode_text, format_event, parse_chat_request,
+                           parse_stream)
+
+MODEL = "yi-9b-smoke"
+VOCAB = 512          # get_smoke_config("yi-9b").vocab; pinned for unit tests
+
+
+# ===================================================================== wire
+def parse(obj, **kw):
+    kw.setdefault("model_ids", [MODEL])
+    kw.setdefault("vocab", VOCAB)
+    kw.setdefault("max_seq", 64)
+    body = obj if isinstance(obj, bytes) else json.dumps(obj).encode()
+    return parse_chat_request(body, **kw)
+
+
+def test_parse_status_code_split():
+    """Malformed -> 400, unknown model -> 404, over-window -> 413."""
+    for bad, code in [
+            (b"{nope", "invalid_json"),
+            (b"[1,2]", "invalid_json"),
+            ({"messages": [{"role": "user", "content": "hi"}]},
+             "invalid_model"),
+            ({"model": MODEL}, "invalid_messages"),
+            ({"model": MODEL, "messages": []}, "invalid_messages"),
+            ({"model": MODEL, "messages": [{"role": "user"}]},
+             "invalid_messages"),
+            ({"model": MODEL, "token_ids": []}, "invalid_token_ids"),
+            ({"model": MODEL, "token_ids": [1, VOCAB]},
+             "invalid_token_ids"),
+            ({"model": MODEL, "token_ids": [1, -1]}, "invalid_token_ids"),
+            ({"model": MODEL, "token_ids": [1], "max_tokens": 0},
+             "invalid_max_tokens"),
+            ({"model": MODEL, "token_ids": [1], "max_tokens": True},
+             "invalid_max_tokens"),
+            ({"model": MODEL, "token_ids": [1], "stream": "yes"},
+             "invalid_stream"),
+            ({"model": MODEL, "token_ids": [1], "deadline_s": -2},
+             "invalid_deadline")]:
+        with pytest.raises(GatewayError) as e:
+            parse(bad)
+        assert e.value.status == 400 and e.value.code == code, bad
+    with pytest.raises(GatewayError) as e:
+        parse({"model": "gpt-oops", "token_ids": [1]})
+    assert e.value.status == 404 and e.value.code == "model_not_found"
+    with pytest.raises(GatewayError) as e:
+        parse({"model": MODEL, "token_ids": [1] * 60, "max_tokens": 8})
+    assert e.value.status == 413 and e.value.code == "context_window_exceeded"
+    assert "error" in e.value.body() and "message" in e.value.body()["error"]
+
+
+def test_parse_accepts_both_encodings():
+    r = parse({"model": MODEL, "token_ids": [3, 1, 4], "max_tokens": 2,
+               "stream": True, "priority": 2, "deadline_s": 1.5,
+               "user": "alice"})
+    assert isinstance(r, ChatRequest)
+    assert r.prompt_tokens == [3, 1, 4] and r.stream and r.priority == 2.0
+    assert r.deadline_s == 1.5 and r.client_id == "alice"
+    # text path: deterministic stub tokenizer; decimal ids round-trip
+    r2 = parse({"model": MODEL,
+                "messages": [{"role": "user", "content": "3 1 4"}]})
+    assert r2.prompt_tokens == [3, 1, 4]
+    words = parse({"model": MODEL,
+                   "messages": [{"role": "user", "content": "hello world"}]})
+    assert words.prompt_tokens == encode_text("hello world", VOCAB)
+    assert all(0 <= t < VOCAB for t in words.prompt_tokens)
+
+
+def test_sse_framing_roundtrip():
+    payload = (format_event({"a": 1}) + format_event({"b": [2, 3]})
+               + b"data: [DONE]\n\n")
+    chunks, done = parse_stream(payload)
+    assert chunks == [{"a": 1}, {"b": [2, 3]}] and done
+    assert format_event({"x": 1}).endswith(b"\n\n")
+    _, done = parse_stream(format_event({"a": 1}))
+    assert not done
+
+
+# ===================================================================== broker
+class FakeClock:
+    def __init__(self):
+        self.t = 100.0
+
+    def __call__(self):
+        return self.t
+
+
+def chat(priority=0.0, deadline_s=None, max_tokens=4, client=None):
+    return ChatRequest(model=MODEL, prompt_tokens=[1, 2, 3],
+                       max_tokens=max_tokens, priority=priority,
+                       deadline_s=deadline_s, client_id=client)
+
+
+def test_bounded_queue_exactly_k_rejections():
+    """Q + k submissions against an undrained queue: exactly k QueueFull,
+    and the ledger reconciles before and after."""
+    clk = FakeClock()
+    br = RequestBroker(max_queue=5, clock=clk)
+    rejected = 0
+    for _ in range(5 + 3):
+        try:
+            br.submit(chat())
+        except QueueFull as e:
+            rejected += 1
+            assert e.retry_after_s >= 1.0
+    assert rejected == 3 and br.depth() == 5
+    led = br.ledger
+    assert led.received == 8 and led.admitted == 5
+    assert led.rejected_429_queue == 3 and br.reconciles()
+    # drain: every admitted ticket completes; ledger still balances
+    while (t := br.pick()) is not None:
+        br.complete(t, generated_tokens=4)
+    assert br.ledger.completed == 5 and br.reconciles()
+
+
+def test_rate_window_slides():
+    clk = FakeClock()
+    br = RequestBroker(max_queue=64, rate_limit=2, rate_window_s=1.0,
+                       clock=clk)
+    br.submit(chat(client="a"))
+    clk.t += 0.4
+    br.submit(chat(client="a"))
+    with pytest.raises(RateLimited) as e:
+        br.submit(chat(client="a"))
+    assert 0 < e.value.retry_after_s <= 1.0
+    br.submit(chat(client="b"))          # other clients unaffected
+    clk.t += 0.7                         # first entry now out of the window
+    br.submit(chat(client="a"))
+    assert br.ledger.rejected_429_rate == 1 and br.reconciles()
+
+
+def test_aging_beats_fresh_high_priority():
+    """A plain request queued long enough outranks a stream of fresh
+    priority-5 arrivals: aging grows without bound (starvation freedom)."""
+    clk = FakeClock()
+    br = RequestBroker(max_queue=64, aging_s=1.0, clock=clk)
+    old = br.submit(chat(priority=0.0))
+    clk.t += 7.0                         # aged 7 classes
+    fresh = br.submit(chat(priority=5.0))
+    assert br.pick() is old
+    assert br.pick() is fresh
+    # ties break FIFO: same priority, same arrival -> submission order
+    a, b = br.submit(chat()), br.submit(chat())
+    assert br.pick() is a and br.pick() is b
+
+
+def test_deadline_urgency_and_min_slack():
+    clk = FakeClock()
+    br = RequestBroker(max_queue=64, aging_s=1.0, clock=clk)
+    relaxed = br.submit(chat(priority=0.9))
+    urgent = br.submit(chat(priority=0.0, deadline_s=0.2))
+    # urgency ramp is capped at one class: 1 - 0.2/1.0 = 0.8 < 0.9 + aging
+    assert urgent.effective_priority(clk.t, 1.0) == pytest.approx(0.8)
+    assert br.min_slack_s() == pytest.approx(0.2)
+    assert br.pick() is relaxed
+    clk.t += 0.15                        # slack nearly gone; urgency ~1 wins
+    assert br.pick() is urgent
+    assert br.min_slack_s() == pytest.approx(0.05)   # active still counted
+
+
+def test_retry_after_tracks_service_rate():
+    clk = FakeClock()
+    br = RequestBroker(max_queue=64, clock=clk)
+    t = br.submit(chat(max_tokens=10))
+    br.pick()
+    clk.t += 1.0
+    br.complete(t, generated_tokens=10)  # 0.1 s/token observed
+    br.submit(chat(max_tokens=40))
+    assert br.retry_after_s() == pytest.approx(4.0)  # 40 tok * 0.1 s
+    assert br.reconciles()
+
+
+def test_cancel_is_idempotent_and_reconciles():
+    clk = FakeClock()
+    br = RequestBroker(max_queue=4, clock=clk)
+    q = br.submit(chat())
+    a = br.submit(chat())
+    assert br.pick() is q
+    assert br.cancel(a) == "queued" and br.cancel(a) == "cancelled"
+    assert br.cancel(q) == "active"
+    assert br.ledger.cancelled == 2 and br.reconciles()
+    assert br.depth() == 0 and not br.active
+
+
+# ============================================================ tier scheduling
+def synth_schedule():
+    # 1-token iterations are cheap at tier 1; tier 8 amortises a full batch
+    return Schedule(tiers={1: TierEntry(Plan("static", []), 1.0),
+                           8: TierEntry(Plan("static", []), 2.0)},
+                    pinned_bytes=0, scratch_bytes=0, budget_bytes=0)
+
+
+def test_decode_tier_anticipates_queue():
+    s = synth_schedule()
+    # queue-blind defaults match pick_tier exactly (baseline unchanged)
+    assert s.pick_decode_tier(1) == s.pick_tier(1) == 1
+    # queued work pulls the pick up to the imminent batch
+    assert s.pick_decode_tier(1, queue_depth=7) == 8
+    # ...unless the bigger tier's cost overruns the tightest deadline slack
+    assert s.pick_decode_tier(1, queue_depth=7, slack_s=1.5) == 1
+    # ample slack keeps the anticipated tier
+    assert s.pick_decode_tier(1, queue_depth=7, slack_s=3.0) == 8
+    # no queue -> slack veto never fires (nothing anticipated)
+    assert s.pick_decode_tier(1, slack_s=0.01) == 1
+
+
+def test_prefill_tier_floor_raised_by_queue():
+    s = synth_schedule()
+    # idle queue: pick unchanged from the queue-blind baseline
+    assert s.pick_prefill_tier(4, min_tier=1) == \
+        s.pick_prefill_tier(4, min_tier=1, queue_depth=0) == 1
+    # imminent admissions raise the executor's batch floor
+    assert s.pick_prefill_tier(1, min_tier=1, queue_depth=3) == 8
+    # floor past every tier: clamps to the largest (executor cap applies)
+    assert s.pick_prefill_tier(1, min_tier=2, queue_depth=16) == 8
+
+
+# ============================================================ model fixtures
+@pytest.fixture(scope="module")
+def db():
+    return run_install(CLI2, quick=True)
+
+
+@pytest.fixture(scope="module")
+def built(db):
+    cfg = get_smoke_config("yi-9b")
+    from repro.models import build_model
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    subs = build_graph(cfg, wdtype=2)
+    budget = int(sum(s.weight_bytes for s in subs) * 0.2) + 1
+    sched = build_schedule(budget, subs, TimingEstimator(db, CLI2),
+                           InferenceSetting(batch=2, context=64))
+    return cfg, params, sched
+
+
+def make_batcher(built, **kw):
+    cfg, params, sched = built
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    kw.setdefault("fused", True)
+    return ContinuousBatcher(cfg, params, sched, **kw)
+
+
+def wave(cfg, n=4, max_new=4):
+    rng = np.random.RandomState(0)
+    return [Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=5 + 2 * i)
+                    .astype(np.int32), max_new_tokens=max_new)
+            for i in range(n)]
+
+
+# ============================================================ incremental API
+def test_ttft_none_until_first_token_and_stats_skip(built):
+    """Satellite: ``Request.ttft`` is ``None`` (not a large negative)
+    before any token lands, and the mean in ``stats()`` skips unstarted
+    requests instead of being poisoned by them."""
+    cfg, _, _ = built
+    r = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=4)
+    assert r.ttft is None
+    b = make_batcher(built)
+    reqs = wave(cfg, n=4)
+    b.submit(reqs)
+    b.step()                             # admits 2, first tokens for those
+    st = b.stats()
+    assert st["mean_ttft_s"] >= 0.0
+    started = [r for r in reqs if r.ttft is not None]
+    unstarted = [r for r in reqs if r.ttft is None]
+    assert started and unstarted        # mixed wave mid-serve
+    assert all(r.ttft > 0 for r in started)
+    b.serve([])                          # run remaining work down
+    assert all(r.ttft is not None and r.ttft > 0 for r in reqs)
+    assert b.stats()["mean_ttft_s"] == pytest.approx(
+        float(np.mean([r.ttft for r in reqs])))
+
+
+def test_step_matches_serve_and_events_cover_tokens(built):
+    """``serve()`` is exactly a ``submit(); while has_work: step()`` loop,
+    and the TokenEvent stream names every generated token once, in order,
+    with ``done`` on the final one."""
+    cfg, _, _ = built
+    ref = wave(cfg)
+    make_batcher(built).serve(ref)
+    b = make_batcher(built)
+    reqs = wave(cfg)
+    b.submit(reqs)
+    events = []
+    while b.has_work:
+        events.append(b.step())
+    assert [r.generated for r in reqs] == [r.generated for r in ref]
+    per_rid = {}
+    for it in events:
+        for ev in it:
+            per_rid.setdefault(ev.rid, []).append(ev)
+    for r in reqs:
+        evs = per_rid[r.rid]
+        assert [e.token for e in evs] == r.generated
+        assert [e.index for e in evs] == list(range(len(r.generated)))
+        assert [e.done for e in evs] == \
+            [i == len(evs) - 1 for i in range(len(evs))]
+    assert not b.step()                  # idle step: no work, no events
+
+
+def test_cancel_frees_slot_and_leaves_others_bit_identical(built):
+    """Satellite: cancelling an active request mid-decode frees its slot
+    for the next pending admission and never perturbs the others' tokens
+    (rows are independent in the fused step)."""
+    cfg, _, _ = built
+    ref = wave(cfg, n=4, max_new=6)
+    make_batcher(built).serve(ref)
+    b = make_batcher(built)
+    reqs = wave(cfg, n=4, max_new=6)
+    b.submit(reqs)
+    b.step()                             # rids 0,1 active
+    assert b.cancel(0) == "active"
+    assert b.cancel(2) == "queued"       # still pending
+    assert b.cancel(99) is None
+    b.serve([])
+    assert reqs[0].cancelled_at is not None and not reqs[0].done
+    assert len(reqs[0].generated) <= 2   # stopped right where it was cut
+    for i in (1, 3):
+        assert reqs[i].generated == ref[i].generated, f"rid {i} perturbed"
+    st = b.stats()
+    assert st["cancelled"] == 2 and st["completed"] == 2
+
+
+# ============================================================ gateway http
+def run(coro):
+    return asyncio.run(coro)
+
+
+def body_for(cfg, token_ids, max_tokens=4, **kw):
+    return json.dumps({"model": cfg.name, "token_ids": token_ids,
+                       "max_tokens": max_tokens, **kw}).encode()
+
+
+def test_gateway_http_error_paths(built):
+    cfg, _, _ = built
+
+    async def main():
+        gw = Gateway(batcher=make_batcher(built), max_queue=4)
+        c = InprocClient(gw)
+        st, _, b = await c.request("POST", "/v1/chat/completions", b"{nope")
+        assert st == 400 and json.loads(b)["error"]["code"] == "invalid_json"
+        st, _, b = await c.request("POST", "/v1/chat/completions",
+                                   json.dumps({"model": "gpt-oops",
+                                               "token_ids": [1]}).encode())
+        assert st == 404 and json.loads(b)["error"]["code"] \
+            == "model_not_found"
+        st, _, b = await c.request("POST", "/v1/chat/completions",
+                                   body_for(cfg, [1] * 60, max_tokens=8))
+        assert st == 413 and json.loads(b)["error"]["code"] \
+            == "context_window_exceeded"
+        st, _, b = await c.request("GET", "/nope")
+        assert st == 404 and json.loads(b)["error"]["code"] == "unknown_route"
+        st, _, b = await c.request(
+            "POST", "/v1/chat/completions", b"",
+            headers={"content-length": str(2 << 20)})
+        assert st == 413 and json.loads(b)["error"]["code"] \
+            == "body_too_large"
+        st, _, b = await c.request("GET", "/v1/models")
+        assert st == 200 and json.loads(b)["data"][0]["id"] == cfg.name
+        st, _, b = await c.request("GET", "/healthz")
+        assert st == 200 and json.loads(b)["status"] == "ok"
+        await gw.close()
+
+    run(main())
+
+
+def test_gateway_wave_bit_identical_and_streams_early(built):
+    """The acceptance wave: staggered streaming requests over HTTP produce
+    byte-for-byte the tokens a direct ``ContinuousBatcher.serve()`` gives
+    the same prompts — and the first SSE chunk lands before any request
+    completes (streaming is incremental, not buffered)."""
+    cfg, _, _ = built
+    ref = wave(cfg, n=5)
+    make_batcher(built).serve(ref)
+
+    async def client(c, r, out):
+        st, _, end = await c.open_stream(
+            "POST", "/v1/chat/completions",
+            body_for(cfg, [int(t) for t in r.prompt],
+                     max_tokens=r.max_new_tokens, stream=True))
+        assert st == 200
+        raw = await end.reader.read()
+        end.close()
+        chunks, done = parse_stream(raw)
+        assert done
+        assert chunks[0]["choices"][0]["delta"]["role"] == "assistant"
+        assert chunks[-1]["choices"][0]["finish_reason"] == "length"
+        assert all(ch["object"] == "chat.completion.chunk" for ch in chunks)
+        out[r.rid] = [ch["choices"][0]["delta"]["token_id"] for ch in chunks]
+
+    async def main():
+        gw = Gateway(batcher=make_batcher(built), max_queue=16,
+                     queue_aware=True).start()
+        c = InprocClient(gw)
+        out = {}
+        tasks = []
+        for r in wave(cfg, n=5):
+            tasks.append(asyncio.ensure_future(client(c, r, out)))
+            await asyncio.sleep(0.01)    # staggered arrivals
+        await asyncio.gather(*tasks)
+        m = gw.metrics()
+        # SSE was incremental: the first chunk left the gateway strictly
+        # before the first request completed
+        assert gw._first_chunk_at is not None \
+            and gw._first_done_at is not None \
+            and gw._first_chunk_at < gw._first_done_at
+        await gw.close()
+        return out, m
+
+    out, metrics = run(main())
+    for r in ref:
+        assert out[r.rid] == r.generated, \
+            f"rid {r.rid}: gateway {out[r.rid]} != direct {r.generated}"
+    assert metrics["broker"]["ledger"]["completed"] == 5
+    assert metrics["broker"]["reconciles"]
+    assert metrics["ttft_p50_s"] > 0
+
+
+def test_gateway_unary_matches_stream(built):
+    cfg, _, _ = built
+
+    async def main():
+        gw = Gateway(batcher=make_batcher(built), max_queue=8)
+        c = InprocClient(gw)
+        st, _, b = await c.request("POST", "/v1/chat/completions",
+                                   body_for(cfg, [7, 8, 9]))
+        assert st == 200
+        obj = json.loads(b)
+        assert obj["object"] == "chat.completion"
+        ch = obj["choices"][0]
+        assert ch["finish_reason"] == "length"
+        assert obj["usage"] == {"prompt_tokens": 3, "completion_tokens": 4,
+                                "total_tokens": 7}
+        st, _, b2 = await c.request("POST", "/v1/chat/completions",
+                                    body_for(cfg, [7, 8, 9], stream=True))
+        chunks, done = parse_stream(b2)
+        assert done
+        streamed = [c2["choices"][0]["delta"]["token_id"] for c2 in chunks]
+        assert streamed == ch["token_ids"]
+        # rendered text round-trips through the stub tokenizer
+        assert encode_text(ch["message"]["content"], cfg.vocab) \
+            == ch["token_ids"]
+        await gw.close()
+
+    run(main())
+
+
+def test_gateway_backpressure_exactly_k_429(built):
+    """Acceptance: bounded queue Q, Q+k concurrent submissions while the
+    pump is held -> exactly k 429s with Retry-After; releasing the pump
+    completes every admitted request and the metrics ledger reconciles."""
+    cfg, _, _ = built
+    Q, K = 4, 3
+
+    async def main():
+        gw = Gateway(batcher=make_batcher(built), max_queue=Q)
+        # hold the pump: a placeholder task blocks start() from spawning
+        # it, so all Q+K submissions land on an undrained queue
+        gw._wake = asyncio.Event()
+        hold = asyncio.ensure_future(asyncio.sleep(3600))
+        gw._pump_task = hold
+        c = InprocClient(gw)
+        tasks = [asyncio.ensure_future(
+            c.request("POST", "/v1/chat/completions",
+                      body_for(cfg, [1 + i, 2, 3])))
+            for i in range(Q + K)]
+        while gw.broker.ledger.received < Q + K:
+            await asyncio.sleep(0.001)
+        assert gw.broker.depth() == Q and gw.broker.reconciles()
+        # release the pump: everyone admitted finishes
+        hold.cancel()
+        gw._pump_task = None
+        gw.start()
+        results = await asyncio.gather(*tasks)
+        rejected = [(st, h) for st, h, _ in results if st == 429]
+        assert len(rejected) == K
+        assert all("retry-after" in h and int(h["retry-after"]) >= 1
+                   for _, h in rejected)
+        assert [st for st, _, _ in results].count(200) == Q
+        await gw.close(drain=True)
+        led = gw.broker.ledger.as_dict()
+        assert led["completed"] == Q and led["rejected_429_queue"] == K
+        assert led["received"] == Q + K and gw.broker.reconciles()
+        assert gw.metrics()["broker"]["ledger"] == led
+
+    run(main())
+
+
+def test_gateway_rate_limit_over_http(built):
+    cfg, _, _ = built
+
+    async def main():
+        gw = Gateway(batcher=make_batcher(built), max_queue=8,
+                     rate_limit=1, rate_window_s=30.0)
+        c = InprocClient(gw)
+        hdr = {"x-client-id": "hammer"}
+        st1, _, _ = await c.request("POST", "/v1/chat/completions",
+                                    body_for(cfg, [1, 2]), headers=hdr)
+        st2, h2, b2 = await c.request("POST", "/v1/chat/completions",
+                                      body_for(cfg, [1, 2]), headers=hdr)
+        assert st1 == 200 and st2 == 429
+        assert json.loads(b2)["error"]["code"] == "rate_limited"
+        assert "retry-after" in h2
+        # distinct client id: its own window
+        st3, _, _ = await c.request("POST", "/v1/chat/completions",
+                                    body_for(cfg, [1, 2]),
+                                    headers={"x-client-id": "gentle"})
+        assert st3 == 200
+        await gw.close()
+
+    run(main())
+
+
+def test_gateway_disconnect_cancels_and_frees_paged_kv(built):
+    """Satellite: a client vanishing mid-stream retires its slot and
+    derefs its paged-KV blocks — allocator invariants hold, zero blocks
+    leak after drain, and the surviving requests' tokens are bit-identical
+    to an undisturbed direct run."""
+    cfg, params, sched = built
+    ref = wave(cfg, n=3, max_new=6)
+    bref = ContinuousBatcher(cfg, params, sched, max_batch=2, max_seq=64,
+                             fused=True, kv_layout="paged")
+    bref.kv.prefix_enabled = False
+    bref.serve(ref)
+
+    async def victim(c, r):
+        st, _, end = await c.open_stream(
+            "POST", "/v1/chat/completions",
+            body_for(cfg, [int(t) for t in r.prompt],
+                     max_tokens=r.max_new_tokens, stream=True))
+        assert st == 200
+        await end.reader.readuntil(b"\n\n")     # one chunk, then vanish
+        end.close()
+
+    async def survivor(c, r, out):
+        st, _, b = await c.request(
+            "POST", "/v1/chat/completions",
+            body_for(cfg, [int(t) for t in r.prompt],
+                     max_tokens=r.max_new_tokens))
+        assert st == 200
+        out[r.rid] = json.loads(b)["choices"][0]["token_ids"]
+
+    async def main():
+        b = ContinuousBatcher(cfg, params, sched, max_batch=2, max_seq=64,
+                              fused=True, kv_layout="paged")
+        b.kv.prefix_enabled = False
+        gw = Gateway(batcher=b, max_queue=8).start()
+        c = InprocClient(gw)
+        reqs = wave(cfg, n=3, max_new=6)
+        out = {}
+        tasks = [asyncio.ensure_future(victim(c, reqs[0]))]
+        await asyncio.sleep(0)
+        tasks += [asyncio.ensure_future(survivor(c, r, out))
+                  for r in reqs[1:]]
+        await asyncio.gather(*tasks)
+        await gw.close(drain=True)
+        return b, gw, out
+
+    b, gw, out = run(main())
+    for r in ref[1:]:
+        assert out[r.rid] == r.generated, f"rid {r.rid} perturbed"
+    assert gw.broker.ledger.cancelled == 1
+    assert gw.broker.ledger.completed == 2 and gw.broker.reconciles()
+    assert all(s is None for s in b.slots)      # slot actually freed
+    b.kv.alloc.check()                          # allocator invariants hold
+    assert len(b.kv.alloc.blocks) == 0, "paged-KV blocks leaked"
+
+
+def test_gateway_drain_rejects_with_503(built):
+    cfg, _, _ = built
+
+    async def main():
+        gw = Gateway(batcher=make_batcher(built), max_queue=8).start()
+        c = InprocClient(gw)
+        st, _, _ = await c.request("POST", "/v1/chat/completions",
+                                   body_for(cfg, [1, 2]))
+        assert st == 200
+        closer = asyncio.ensure_future(gw.close(drain=True))
+        await asyncio.sleep(0)
+        st, h, b = await c.request("POST", "/v1/chat/completions",
+                                   body_for(cfg, [1, 2]))
+        assert st == 503 and json.loads(b)["error"]["code"] \
+            == "shutting_down"
+        st, _, b = await c.request("GET", "/healthz")
+        assert st == 200 and json.loads(b)["draining"]
+        await closer
+
+    run(main())
+
+
+def test_gateway_rebudget_over_http(built, db):
+    """The admin endpoint applies a live re-plan between pump steps and
+    serving continues bit-identically (DESIGN.md §8 invariant, now over
+    the wire)."""
+    cfg, _, _ = built
+    total = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+    sess = Session.open(cfg, CLI2, int(total * 0.2) + 1,
+                        InferenceSetting(batch=2, context=64),
+                        db=db, max_seq=64)
+    ref = wave(cfg, n=3, max_new=6)
+    make_batcher((cfg, sess.params, sess.schedule)).serve(ref)
+
+    async def main():
+        gw = sess.gateway(max_queue=8, max_batch=2).start()
+        c = InprocClient(gw)
+        # no-session rejection is pinned too
+        gw2 = Gateway(batcher=make_batcher((cfg, sess.params,
+                                            sess.schedule)))
+        st, _, b = await InprocClient(gw2).request(
+            "POST", "/admin/rebudget",
+            json.dumps({"budget_bytes": 1}).encode())
+        assert st == 409 and json.loads(b)["error"]["code"] == "no_session"
+        st, _, b = await c.request("POST", "/admin/rebudget", b"{}")
+        assert st == 400
+
+        reqs = wave(cfg, n=3, max_new=6)
+        out = {}
+
+        async def go(r):
+            st, _, body = await c.request(
+                "POST", "/v1/chat/completions",
+                body_for(cfg, [int(t) for t in r.prompt],
+                         max_tokens=r.max_new_tokens))
+            assert st == 200
+            out[r.rid] = json.loads(body)["choices"][0]["token_ids"]
+
+        tasks = [asyncio.ensure_future(go(r)) for r in reqs]
+        await asyncio.sleep(0)
+        st, _, b = await c.request(
+            "POST", "/admin/rebudget",
+            json.dumps({"budget_bytes": int(total * 0.5) + 1}).encode())
+        assert st == 200
+        obj = json.loads(b)
+        assert obj["applied"] and obj["budget_bytes"] == int(total * 0.5) + 1
+        await asyncio.gather(*tasks)
+        await gw.close(drain=True)
+        return out
+
+    out = run(main())
+    for r in ref:
+        assert out[r.rid] == r.generated, \
+            f"rid {r.rid} diverged across mid-serve rebudget"
