@@ -1,0 +1,176 @@
+"""Speculative-decode benchmark: streamed bytes per committed token
+(DESIGN.md §14).
+
+The paper's decode regime is transfer-bound: every decode pass drags the
+streamed tiers across the PCIe link to commit ``batch`` tokens. A
+VRAM-pinned draft amortizes that crossing over the token axis — one
+verify pass of width ``k+1`` commits up to ``k+1`` tokens per slot for
+the SAME plan crossing. This benchmark measures exactly that quotient.
+
+Setup is self-speculation: the draft IS the target (same config, same
+weights), so the acceptance rate is structurally high (rejections come
+only from end-of-request truncation) and the measurement isolates the
+transfer amortization from draft quality. The plain baseline runs at
+``spec_budget - draft_carve`` — byte-for-byte the SAME target schedule
+the speculative session plans its verify passes with, so both sides
+stream identical bytes per pass and the ratio is purely tokens-per-pass.
+
+Three hard assertions ride along (the benchmark doubles as an
+end-to-end acceptance gate):
+
+- **bit-identity**: the speculative wave's tokens equal the plain fused
+  wave's, stacked AND paged;
+- **exact ledger**: every verify pass satisfies ``streamed_bytes ==
+  static_plan_bytes + demanded_expert_bytes + demanded_page_bytes`` to
+  the byte, and the pinned draft streams exactly 0 bytes;
+- **amortization**: streamed bytes per committed decode token drop
+  >= 2x vs plain fused decode at accept rate >= 0.6.
+
+    PYTHONPATH=src python -m benchmarks.run spec_decode
+
+``REPRO_BENCH_SMOKE=1`` shrinks the sweep to a CI-sized smoke run.
+"""
+from __future__ import annotations
+
+import os
+
+# bit-identity is asserted across differently-compiled paths: pin per-op
+# bf16 rounding exactly as tests/conftest.py does (see the comment there)
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_allow_excess_precision" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_allow_excess_precision=false").strip()
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import get_db, write_csv  # noqa: E402
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core import (CLI2, InferenceSetting, build_graph)  # noqa: E402
+from repro.core.serving import Request  # noqa: E402
+from repro.session import Session  # noqa: E402
+
+ARCH = "yi-9b"
+BUDGET_FRAC = 1.8   # leaves the target streaming AFTER the draft carve
+# wide window: a verify pass of n_active*(k+1) tokens legitimately steps
+# the tier UP (more streamed bytes per pass than plain's small-batch
+# tier), so the window must amortize over enough tokens to beat that
+SPEC_K = 5
+
+
+def _wave(cfg, n, max_new, seed=0):
+    rng = np.random.RandomState(seed)
+    return [Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=6 + 3 * i)
+                    .astype(np.int32), max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _serve(sess, cfg, n, max_new, max_batch):
+    reqs = _wave(cfg, n, max_new)
+    sess.serve(reqs, max_batch=max_batch)
+    return reqs
+
+
+def _bytes_per_token(srv, n_requests):
+    # committed DECODE tokens: each request's first token comes off the
+    # prefill logits, the rest off decode/verify passes
+    decode_tokens = srv["generated_tokens"] - n_requests
+    streamed = srv["mean_iter_streamed_bytes"] * srv["iterations"]
+    return streamed / max(decode_tokens, 1), decode_tokens
+
+
+def _check_ledger(ex):
+    passes = ex.stats.verify_pass_stats
+    assert passes, "speculative serve produced no verify passes"
+    for e in passes:
+        want = (e["static_plan_bytes"] + e["demanded_expert_bytes"]
+                + e["demanded_page_bytes"])
+        assert e["streamed_bytes"] == want, \
+            f"verify-pass ledger leak: {e}"
+    return passes
+
+
+def _one_layout(cfg, db, budget, smoke, kv_layout):
+    # even request count keeps both batch slots busy every iteration, and
+    # max_new - 1 decode tokens divide by the window so no request pays
+    # an end-of-request truncated (partially wasted) verify pass
+    n = 4 if smoke else 6
+    max_new = 1 + 2 * (SPEC_K + 1) if smoke else 1 + 4 * (SPEC_K + 1)
+    max_batch = 2
+    setting = InferenceSetting(batch=max_batch, context=64)
+
+    def open_s(b, **kw):
+        return Session.open(cfg, CLI2, b, setting, db=db, max_seq=128,
+                            kv_layout=kv_layout, **kw)
+
+    spec = open_s(budget, draft_cfg=cfg, spec_k=SPEC_K)
+    spec._draft_params = spec.params          # self-speculation
+    assert spec.spec_active, "draft carve infeasible at the bench budget"
+    # plain baseline at the SAME post-carve target budget: identical plans
+    plain = open_s(budget - spec.draft_carve_bytes)
+
+    a = _serve(spec, cfg, n, max_new, max_batch)
+    b = _serve(plain, cfg, n, max_new, max_batch)
+    for x, y in zip(a, b):
+        assert x.generated == y.generated, \
+            f"spec/plain divergence rid {x.rid}: {x.generated} " \
+            f"vs {y.generated}"
+
+    srv_s, srv_p = spec.stats()["serving"], plain.stats()["serving"]
+    assert srv_s["accept_rate"] >= 0.6, srv_s["accept_rate"]
+    assert srv_s["draft"]["streamed_bytes"] == 0, srv_s["draft"]
+    passes = _check_ledger(spec._batcher.ex)
+    bpt_s, tok_s = _bytes_per_token(srv_s, n)
+    bpt_p, tok_p = _bytes_per_token(srv_p, n)
+    assert bpt_p > 0, "plain baseline streamed nothing - raise BUDGET_FRAC"
+    ratio = bpt_p / max(bpt_s, 1e-12)
+    assert ratio >= 2.0, \
+        f"{kv_layout}: bytes/token only dropped {ratio:.2f}x " \
+        f"(plain {bpt_p:.0f}, spec {bpt_s:.0f})"
+    return {
+        "kv_layout": kv_layout,
+        "accept_rate": srv_s["accept_rate"],
+        "spec_bytes_per_token": bpt_s,
+        "plain_bytes_per_token": bpt_p,
+        "ratio": ratio,
+        "decode_tokens": tok_s,
+        "verify_passes": len(passes),
+        "mean_verify_width": float(np.mean([e["width"] for e in passes])),
+        "rollbacks": srv_s["spec_rollbacks"],
+        "draft_carve_bytes": spec.draft_carve_bytes,
+    }
+
+
+def run():
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    db = get_db("cli2")
+    cfg = get_smoke_config(ARCH)
+    total = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+    budget = int(total * BUDGET_FRAC) + 1
+    rows = []
+    for kv_layout in ("stacked", "paged"):
+        r = _one_layout(cfg, db, budget, smoke, kv_layout)
+        rows.append([ARCH, kv_layout, round(r["accept_rate"], 3),
+                     round(r["spec_bytes_per_token"], 1),
+                     round(r["plain_bytes_per_token"], 1),
+                     round(r["ratio"], 2), r["decode_tokens"],
+                     r["verify_passes"], r["mean_verify_width"],
+                     r["rollbacks"], r["draft_carve_bytes"]])
+        tag = f"spec_decode.{kv_layout}"
+        print(f"{tag},accept_rate,{r['accept_rate']:.3f}")
+        print(f"{tag},spec_bytes_per_token,{r['spec_bytes_per_token']:.1f}")
+        print(f"{tag},plain_bytes_per_token,"
+              f"{r['plain_bytes_per_token']:.1f}")
+        print(f"{tag},bytes_per_token_ratio,{r['ratio']:.2f}")
+        print(f"{tag},bit_identical,1")
+        print(f"{tag},ledger_exact,1")
+    path = write_csv("spec_decode.csv", rows,
+                     ["arch", "kv_layout", "accept_rate",
+                      "spec_bytes_per_token", "plain_bytes_per_token",
+                      "ratio", "decode_tokens", "verify_passes",
+                      "mean_verify_width", "rollbacks",
+                      "draft_carve_bytes"])
+    print(f"spec_decode,csv,{path}")
+
+
+if __name__ == "__main__":
+    run()

@@ -59,6 +59,11 @@ class ModelConfig:
     # zero-points, dequant fused into the streamed matmul (DESIGN.md §11).
     # "fp16" keeps weights at the compute dtype — bit-exact baseline.
     weight_quant: str = "fp16"  # fp16 | int8 | int4
+    # tokenizer identity (e.g. "qwen2"): None = unknown. Speculative
+    # decoding compares draft/target token ids, so Session.open raises
+    # when BOTH models declare a tokenizer and they differ — equal vocab
+    # sizes alone do not make the id spaces compatible (DESIGN.md §14)
+    tokenizer: Optional[str] = None
     # citation tag from the assignment card
     source: str = ""
 

@@ -7,8 +7,10 @@ from repro.core.graphing import (  # noqa: F401
 from repro.core.install import run_install  # noqa: F401
 from repro.core.planner import (  # noqa: F401
     PINNED_COMPUTE_KINDS, TIERS, Schedule, ScheduleDiff, build_schedule,
-    estimate_tps, estimate_ttft)
+    choose_spec_k, estimate_spec_tps, estimate_tps, estimate_ttft,
+    plan_draft_carve)
 from repro.core.prefetch import PrefetchEngine, PrefetchStats  # noqa: F401
+from repro.core.specdec import SpecDecoder  # noqa: F401
 from repro.core.profile_db import ProfileDB  # noqa: F401
 from repro.core.sublayer import STREAMABLE_KINDS  # noqa: F401
 from repro.core.system import (  # noqa: F401

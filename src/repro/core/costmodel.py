@@ -221,3 +221,32 @@ class TimingEstimator:
         plan.detail = {"xfer_s": link_done, "gpu_s": compute_total["gpu"],
                        "cpu_s": compute_total["cpu"], "pcie_busy": pcie_busy}
         return finish
+
+    # ------------------------------------------------------ speculation
+    @staticmethod
+    def expected_accepted_tokens(accept_rate: float, k: int) -> float:
+        """Expected committed tokens per verify pass of width ``k+1``
+        under i.i.d. per-position acceptance probability ``accept_rate``
+        (DESIGN.md §14): the truncated-geometric mean
+
+            E[tokens] = (1 - a^(k+1)) / (1 - a)
+
+        counting the bonus token the target always supplies. ``k=0``
+        gives exactly 1 — plain decode — so the speculative model
+        degrades to the current one by construction."""
+        a = min(max(accept_rate, 0.0), 1.0)
+        if a >= 1.0:
+            return float(k + 1)
+        return (1.0 - a ** (k + 1)) / (1.0 - a)
+
+    def spec_iteration_time(self, plan: Plan, batch: int,
+                            setting: InferenceSetting, k: int,
+                            draft_step_s: float) -> float:
+        """One speculative iteration under ``plan``: ``k`` sequential
+        draft steps (the VRAM-pinned draft, no streamed bytes) plus ONE
+        verify pass whose batch-wide new-token count is
+        ``batch * (k+1)`` — the streamed weights cross the link once for
+        the whole window (DESIGN.md §14). ``k=0`` degrades exactly to
+        ``plan_time(plan, batch)``, today's decode estimate."""
+        return k * draft_step_s + self.plan_time(plan, batch * (k + 1),
+                                                 setting)

@@ -88,6 +88,8 @@ class SubLayerEngine:
         donate_pools = (0, 1) if jax.default_backend() != "cpu" else ()
         self.fold_page_step = jax.jit(self._fold_page_step,
                                       donate_argnums=donate_pools)
+        self.rollback_step = jax.jit(self._rollback_step,
+                                     donate_argnums=donate_pools)
         self._ffn_step_jit = jax.jit(self._ffn_step,
                                      static_argnames=("streamed",))
         self.moe_step = jax.jit(self._moe_step)
@@ -226,6 +228,20 @@ class SubLayerEngine:
         kstack = jax.lax.dynamic_update_index_in_dim(kstack, ck, layer, 0)
         vstack = jax.lax.dynamic_update_index_in_dim(vstack, cv, layer, 0)
         return x + out, kstack, vstack
+
+    def _rollback_step(self, kstack, vstack, zero_from, active):
+        """Zero KV at positions >= ``zero_from[b]`` on active rows, every
+        layer at once — the stacked rejected-suffix rollback (DESIGN.md
+        §14). The stacked cache is zero-initialised and append-only, so
+        "never written" IS "all zeros": the masked zero-write restores the
+        cache byte-identical to a run that never verified the rejected
+        drafts. Rows whose suffix was already clean rewrite zeros with
+        zeros — the call is idempotent and safe to issue batch-wide."""
+        self.trace_counts["kv_rollback"] += 1
+        S = kstack.shape[3]
+        clear = (jnp.arange(S)[None, :] >= zero_from[:, None]) & active[:, None]
+        keep = ~clear[None, :, None, :, None]
+        return jnp.where(keep, kstack, 0), jnp.where(keep, vstack, 0)
 
     # ------------------------------------------------------------ paged kv
     # The paged cache (DESIGN.md §12) stores KV in physical pages

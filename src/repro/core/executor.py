@@ -81,6 +81,23 @@ class ExecStats:
     # demanded_page_bytes, always ("kv" bucket in streamed_bytes_by_dtype).
     page_faults: int = 0
     demanded_page_bytes: int = 0
+    # speculative decoding (DESIGN.md §14): drafted = draft tokens offered
+    # to verify passes, accepted = drafted tokens the target confirmed
+    # (bonus tokens from the target's own argmax are NOT counted — the
+    # ratio is the draft-model acceptance rate the planner's k-choice
+    # models), rollbacks = slots whose rejected KV suffix was rolled back.
+    spec_drafted: int = 0
+    spec_accepted: int = 0
+    spec_rollbacks: int = 0
+    spec_rolled_back_tokens: int = 0
+    spec_verify_passes: int = 0
+    # per verify pass: streamed/static/expert/page byte split for the
+    # hard-ledger assertion streamed == static + experts + pages
+    verify_pass_stats: list = field(default_factory=list)
+
+    @property
+    def accept_rate(self) -> float:
+        return self.spec_accepted / max(self.spec_drafted, 1)
 
     @property
     def expert_hit_rate(self) -> float:
@@ -809,6 +826,137 @@ class PipelinedExecutor:
                 / max(demanded, 1),
             })
         return logits, (kv if paged else {"k": k, "v": v})
+
+    def _run_verify(self, tokens, kv, pos_vec, active, n_active: int):
+        """One speculative verify pass (DESIGN.md §14): score ``W = k+1``
+        positions per active slot in a single streamed pass.
+
+        tokens: (B, W) — column 0 is each slot's last committed token at
+        ``pos_vec``; columns 1..k are the draft's proposals. Embedding,
+        FFN/MoE and the head run fused over the whole (B, W) window, but
+        attention advances as a *wavefront*: W sequential calls of the
+        SAME jitted decode executables serving uses, one per window
+        column. That makes the pass bit-identical to W sequential decode
+        steps by construction — the fused ops are bitwise row-equal
+        across widths (elementwise / row-independent matmuls), and each
+        attention call sees exactly the cache state sequential decode
+        would. (A fused multi-position attention step is NOT safe: XLA
+        fuses the decode einsum with the cache-update select differently
+        per shape, drifting bf16 by one ulp.) The weights still cross
+        the link once per layer per pass — one crossing of the streamed
+        plan for up to W accepted tokens instead of one per token — and
+        a cold MoE expert is demanded once per layer per window instead
+        of once per token. Rejected KV suffixes are undone by
+        ``rollback_kv``.
+
+        The tier pick sees ``n_active * W`` new tokens: a verify pass IS
+        a batch-wide token count of that size in the paper's PickTier
+        sense, so wider speculation legitimately steps the tier up.
+
+        Returns ``(logits, kv)`` with logits of shape (B, W, V).
+        """
+        assert self.engine is not None, "speculative verify requires the " \
+            "jitted engine (jit_engine=True)"
+        B, W = tokens.shape
+        paged = isinstance(kv, PagedKVCache)
+        page_demand = 0
+        if paged:
+            pos_h = np.asarray(pos_vec)
+            act_h = np.asarray(active)
+            faults = kv.prepare_verify({int(s): int(pos_h[s])
+                                        for s in range(len(act_h))
+                                        if act_h[s]}, W)
+            page_demand = kv.block_bytes if faults else 0
+            self._active_kvcache = kv
+        tier = self.schedule.pick_decode_tier(
+            n_active * W, queue_depth=self.sched_queue_depth,
+            slack_s=self.sched_slack_s)
+        by_name, streaming, started = self._begin_pass(
+            tier, page_demand_bytes=page_demand)
+        page_stream = paged and started and self._demand_active
+        streamed_before = self.stats.streamed_bytes
+        expert_bytes_before = self.stats.demanded_expert_bytes
+        page_bytes_before = self.stats.demanded_page_bytes
+        # per-pass static plan bytes for the hard ledger (DESIGN.md §14):
+        # what this tier's plan streams regardless of demand traffic
+        static_bytes = sum(
+            p.sub.weight_bytes
+            for p in self.schedule.tiers[tier].plan.static_stream_order()
+            if p.sub.name not in self._pinned_names)
+        try:
+            x = self.engine.embed_step(self._embed_dev, tokens)
+            if paged:
+                def paged_attn(w, x, k, v, i):
+                    self._page_fault_layer(kv, i, page_stream)
+                    # table is static across the window: prepare_verify
+                    # mapped all W positions up front, the wavefront only
+                    # mutates the pools
+                    table = kv.layer_table(i)
+                    cols = []
+                    for j in range(W):
+                        xj, kv.k_pool, kv.v_pool = \
+                            self.engine.attn_decode_paged_step(
+                                w, x[:, j:j + 1], kv.k_pool, kv.v_pool,
+                                table, pos_vec + j, active)
+                        cols.append(xj)
+                    kv.end_layer(i)
+                    return jnp.concatenate(cols, axis=1), k, v
+
+                x, _, _ = self._layer_loop(x, None, None, by_name,
+                                           streaming, paged_attn)
+            else:
+                def stacked_attn(w, x, k, v, i):
+                    cols = []
+                    for j in range(W):
+                        xj, k, v = self.engine.attn_decode_step(
+                            w, x[:, j:j + 1], k, v, self._layer_ids[i],
+                            pos_vec + j, active)
+                        cols.append(xj)
+                    return jnp.concatenate(cols, axis=1), k, v
+
+                k, v = kv["k"], kv["v"]
+                x, k, v = self._layer_loop(x, k, v, by_name, streaming,
+                                           stacked_attn)
+            # unlike _run_chunk the head scores ALL W positions — the
+            # acceptance loop needs the target's argmax at every one
+            logits = self.engine.head_step(self._final_dev,
+                                           self._unembed_dev, x)
+        finally:
+            self._end_pass(started)
+            self._active_kvcache = None
+        self.stats.spec_verify_passes += 1
+        self.stats.verify_pass_stats.append({
+            "width": W,
+            "streamed_bytes": self.stats.streamed_bytes - streamed_before,
+            "static_plan_bytes": static_bytes,
+            "demanded_expert_bytes":
+                self.stats.demanded_expert_bytes - expert_bytes_before,
+            "demanded_page_bytes":
+                self.stats.demanded_page_bytes - page_bytes_before,
+        })
+        return logits, (kv if paged else {"k": k, "v": v})
+
+    def rollback_kv(self, kv, keep_pos, rollback_mask):
+        """Undo the KV writes a verify pass made for rejected positions
+        (DESIGN.md §14). ``keep_pos[b]`` is the first cache index to clear
+        for slot ``b`` (== old pos + accepted count); ``rollback_mask[b]``
+        selects the slots that actually rejected a suffix. Stacked caches
+        zero the tail in one jitted masked write — byte-identical to never
+        having written on a fresh (zero-initialised) cache; paged caches
+        truncate through the page table, releasing whole rejected blocks
+        and zeroing the partial one (COW-safe: the verify pass wrote into
+        this slot's private blocks)."""
+        if isinstance(kv, PagedKVCache):
+            keep_h = np.asarray(keep_pos)
+            mask_h = np.asarray(rollback_mask)
+            for s in range(len(mask_h)):
+                if mask_h[s]:
+                    kv.truncate(int(s), int(keep_h[s]))
+            return kv
+        k, v = self.engine.rollback_step(
+            kv["k"], kv["v"], jnp.asarray(keep_pos, jnp.int32),
+            jnp.asarray(rollback_mask))
+        return {"k": k, "v": v}
 
     def init_kv(self, batch):
         cfg = self.cfg

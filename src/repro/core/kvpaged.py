@@ -347,6 +347,55 @@ class PagedKVCache:
         if self.alloc.release(bid):
             self.host.pop(bid, None)
 
+    def truncate(self, slot: int, keep_tokens: int):
+        """Speculative-verify rollback (DESIGN.md §14): drop the slot's KV
+        at positions ``>= keep_tokens``. Blocks wholly past the keep point
+        are unmapped and released — verify's ``_collect`` created them this
+        pass (the keep point always covers the pre-pass prefix, since at
+        least one verified token is accepted), so releasing them returns
+        the table and allocator to their pre-verify mapping exactly. The
+        partially-kept block has its rejected offsets zeroed (device page
+        or host copy, whichever holds it) so continued decode appends into
+        it exactly as sequential decode would. Shared prefix pages are
+        unreachable here: verify write targets were COW'd private in
+        ``_collect``."""
+        ps = self.page_size
+        jkeep = -(-keep_tokens // ps)         # blocks covering kept prefix
+        for layer in range(self.cfg.n_layers):
+            for j in range(jkeep, self.n_blocks):
+                bid = int(self.bids[layer, slot, j])
+                if bid >= 0:
+                    self._release(bid)
+                    self.bids[layer, slot, j] = -1
+        off = keep_tokens % ps
+        if off == 0:
+            return
+        j = keep_tokens // ps
+        for layer in range(self.cfg.n_layers):
+            bid = int(self.bids[layer, slot, j])
+            if bid < 0:
+                continue
+            if self.alloc.resident(bid):
+                pid = self.alloc.pid(bid)
+                self.k_pool = self.k_pool.at[pid, :, off:].set(0)
+                self.v_pool = self.v_pool.at[pid, :, off:].set(0)
+                self.alloc.mark_dirty(bid)
+            else:
+                k, v = self.host[bid]
+                k, v = k.copy(), v.copy()
+                k[:, off:] = 0
+                v[:, off:] = 0
+                self.host[bid] = (k, v)
+
+    def prepare_verify(self, pos_by_slot: Dict[int, int], width: int):
+        """Allocate one verify pass's write blocks: each slot appends
+        ``width`` positions at ``pos .. pos+width-1`` (DESIGN.md §14).
+        Returns the fault list like ``prepare_decode`` (which this equals
+        at ``width == 1``)."""
+        self._collect((slot, pos + width, pos)
+                      for slot, pos in pos_by_slot.items())
+        return self.faults()
+
     def free_slot(self, slot: int):
         """Retire a sequence: unmap its blocks (prefix-cached ones survive
         through the cache's own reference)."""

@@ -465,3 +465,71 @@ def estimate_tps(sched: Schedule, batch: int = 1) -> float:
     """Decode phase: batch-wide new tokens per iteration = batch."""
     t = sched.time_for_tokens(batch)
     return batch / max(t, 1e-12)
+
+
+# ---------------------------------------------------------- speculation
+def plan_draft_carve(budget_bytes: int, draft_subs: List[SubLayer],
+                     target_subs: List[SubLayer], est: TimingEstimator,
+                     setting: InferenceSetting,
+                     tiers=TIERS) -> Tuple[Optional[Schedule], int]:
+    """Carve the VRAM budget between the target's pins and a wholly
+    resident draft model (DESIGN.md §14).
+
+    The draft is only worth running if it never streams: its carve is the
+    bytes that pin EVERY compute sub-layer plus its KV residency plus its
+    own scratch (activations + the double-buffer sizing its schedule
+    reserves — unused for streaming, but the planner's accounting is kept
+    uniform so ``build_schedule`` over the carve yields an all-pinned
+    plan). Feasibility requires (a) the remaining budget still fits the
+    target's floor — the largest streamable shard's double-buffer plus
+    min-tier activations, i.e. the target can still run a streamed plan
+    at all — and (b) the draft schedule's pin pass actually pinned every
+    compute sub-layer. Returns ``(draft_schedule, carve_bytes)`` or
+    ``(None, 0)`` when infeasible — in which case the caller plans the
+    target at the FULL budget, byte-for-byte today's schedule.
+    """
+    compute = [s for s in draft_subs if s.kind in PINNED_COMPUTE_KINDS]
+    kv = [s for s in draft_subs if s.kind == "kv"]
+    pin_bytes = sum(s.weight_bytes for s in compute) \
+        + sum(s.bytes_resident(setting) for s in kv)
+    carve = int(pin_bytes + decide_scratch_budget(budget_bytes, draft_subs,
+                                                  setting, tiers[0]))
+    remaining = budget_bytes - carve
+    target_floor = 2 * max((s.weight_bytes for s in target_subs
+                            if s.kind in STREAMABLE_KINDS), default=0) \
+        + activation_bytes(target_subs, setting, tiers[0])
+    if remaining < target_floor:
+        return None, 0
+    draft_sched = build_schedule(carve, draft_subs, est, setting, tiers)
+    pinned_names = {p.sub.name for p in draft_sched.pinned_placements()}
+    if any(s.name not in pinned_names for s in compute):
+        return None, 0
+    return draft_sched, carve
+
+
+def estimate_spec_tps(sched: Schedule, draft_step_s: float,
+                      accept_rate: float, k: int, batch: int = 1) -> float:
+    """Committed tokens/s of speculative decode at window ``k`` under the
+    target's ``sched`` (DESIGN.md §14): the truncated-geometric expected
+    tokens per verify pass over the iteration time — ``k`` draft steps
+    plus one verify pass of ``batch * (k+1)`` batch-wide new tokens.
+    ``k=0`` reproduces ``estimate_tps(sched, batch)`` exactly."""
+    e_tok = TimingEstimator.expected_accepted_tokens(accept_rate, k)
+    t = k * draft_step_s + sched.time_for_tokens(batch * (k + 1))
+    return batch * e_tok / max(t, 1e-12)
+
+
+def choose_spec_k(sched: Schedule, draft_step_s: float,
+                  accept_rate: float, k_max: int = 8,
+                  batch: int = 1) -> int:
+    """Pick the draft window maximizing expected committed TPS
+    (DESIGN.md §14). ``k=0`` — plain decode, ``estimate_tps`` — is the
+    baseline; a larger k wins only on STRICT improvement, so with a slow
+    draft or a low acceptance rate the choice degrades to today's path
+    and the whole speculative machinery is a no-op."""
+    best_k, best_tps = 0, estimate_tps(sched, batch)
+    for k in range(1, k_max + 1):
+        tps = estimate_spec_tps(sched, draft_step_s, accept_rate, k, batch)
+        if tps > best_tps:
+            best_k, best_tps = k, tps
+    return best_k

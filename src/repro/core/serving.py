@@ -103,7 +103,8 @@ class ContinuousBatcher:
                  session=None, prefill_mode: Optional[str] = None,
                  kv_layout: str = "stacked",
                  kv_page_size: Optional[int] = None,
-                 kv_pool_pages: Optional[int] = None):
+                 kv_pool_pages: Optional[int] = None,
+                 spec=None, spec_k: int = 0):
         self.cfg = cfg
         self._session = session
         if executor is not None:
@@ -142,6 +143,11 @@ class ContinuousBatcher:
         self.max_batch = max_batch
         # the fused step runs through the jitted engine's batched decode
         self.fused = fused and jit_engine
+        # speculative decoding (DESIGN.md §14): a SpecDecoder drafting
+        # spec_k tokens per iteration for the fused verify pass; spec_k=0
+        # (or spec None) keeps every iteration byte-identical to today
+        self.spec = spec
+        self.spec_k = spec_k if spec is not None and self.fused else 0
         self.kv = self.ex.init_kv(max_batch)
         # paged KV (DESIGN.md §12): admissions map pages and look up the
         # prefix cache inside executor.prefill; retire unmaps the slot
@@ -183,7 +189,9 @@ class ContinuousBatcher:
         decode slots survive because the executor only swaps pinned
         weights, never the KV stacks this batcher holds."""
         return cls(session.cfg, None, max_batch=max_batch, fused=fused,
-                   executor=session.executor, session=session)
+                   executor=session.executor, session=session,
+                   spec=session.spec_decoder(max_batch),
+                   spec_k=session.spec_k)
 
     def rebudget(self, new_budget_bytes: int):
         """Re-plan the session under a new VRAM budget between iterations
@@ -204,6 +212,15 @@ class ContinuousBatcher:
         """Adopt a re-planned schedule (called by the owning Session after
         the executor rebind; tier picks from the next iteration use it)."""
         self.schedule = schedule
+
+    def _bind_spec(self, spec, spec_k: int):
+        """Adopt the session's re-checked speculation state after a
+        rebudget (DESIGN.md §14): a shrunk budget that no longer fits the
+        draft disables speculation mid-serve — the next iteration falls
+        back to plain fused decode, bit-identically — and a later growth
+        can re-enable it against the still-live draft KV."""
+        self.spec = spec
+        self.spec_k = spec_k if spec is not None and self.fused else 0
 
     # ------------------------------------------------------------ admit
     def _admit(self, queue: List[Request]):
@@ -259,6 +276,11 @@ class ContinuousBatcher:
             self.kv["k"] = self.kv["k"].at[:, slot:slot + 1].set(kv_slot["k"])
             self.kv["v"] = self.kv["v"].at[:, slot:slot + 1].set(kv_slot["v"])
         self.tier_log.extend(self.ex.stats.tiers_used[n_tiers:])
+        if self.spec is not None:
+            # warm the draft's KV slot alongside the target's (DESIGN.md
+            # §14); kept even while spec_k is 0 (rebudget-disabled) so a
+            # later re-enable finds the prompt prefix in place
+            self.spec.prefill_slot(slot, req.prompt)
         nxt = int(greedy_token(logits[0, -1]))
         req.generated.append(nxt)
         req.first_token_at = time.perf_counter()
@@ -307,7 +329,9 @@ class ContinuousBatcher:
             return
         before = self.ex.stats.streamed_bytes
         moved_before = self.ex.stats.staged_bytes
-        if self.fused:
+        if self.spec_k > 0:
+            self._decode_spec(active)
+        elif self.fused:
             self._decode_fused(active)
         else:
             self._decode_per_slot(active)
@@ -333,6 +357,88 @@ class ContinuousBatcher:
         nxt = np.asarray(greedy_token(logits[:, -1]))
         for i in active:
             self._advance(i, int(nxt[i]))
+
+    def _seq_token(self, req: Request, idx: int) -> int:
+        """Committed sequence token at index ``idx``: prompt positions
+        first, then generated tokens (generated[0] sits at position
+        len(prompt) — the prefill-produced token)."""
+        T = len(req.prompt)
+        if idx < T:
+            return int(req.prompt[idx])
+        return int(req.generated[idx - T])
+
+    def _decode_spec(self, active: List[int]):
+        """One speculative iteration (DESIGN.md §14): draft ``k`` greedy
+        tokens per active slot on the pinned draft, verify all ``k+1``
+        positions in ONE streamed target pass, commit the longest
+        accepted prefix plus the target's bonus token, roll back the
+        rejected KV suffix. Longest-prefix greedy acceptance makes every
+        committed token the target's own argmax over an identical
+        context, so the output is bit-identical to plain greedy decode
+        by construction.
+
+        The window is clamped so every active slot's writes stay inside
+        the cache (``pos + W <= max_seq`` — ``dynamic_update_slice``
+        would clamp the start index and corrupt earlier positions
+        otherwise); near the sequence end the iteration degrades to a
+        plain fused step."""
+        W = min(self.spec_k + 1,
+                self.max_seq - max(self.slots[i].pos for i in active))
+        if W < 2:
+            self._decode_fused(active)
+            return
+        k = W - 1
+        B = self.max_batch
+        pos_vec = np.zeros((B,), np.int32)
+        mask = np.zeros((B,), bool)
+        prev_tok = np.zeros((B,), np.int32)
+        for i in active:
+            r = self.slots[i]
+            pos_vec[i] = r.pos
+            mask[i] = True
+            prev_tok[i] = self._seq_token(r, r.pos - 1)
+        last = np.asarray(self.last_tokens).reshape(-1)
+        drafts = self.spec.draft(prev_tok, last, pos_vec, mask, k,
+                                 n_active=len(active))
+        tokens = np.concatenate([last[:, None], drafts],
+                                axis=1).astype(np.int32)
+        # a verify pass IS a batch-wide new-token count of n_active * W
+        # in the paper's PickTier sense — log the same pick _run_verify
+        # makes so tier accounting matches plain serving's convention
+        self.tier_log.append(self.schedule.pick_decode_tier(
+            len(active) * W, queue_depth=self.ex.sched_queue_depth,
+            slack_s=self.ex.sched_slack_s))
+        logits, self.kv = self.ex._run_verify(
+            jnp.asarray(tokens), self.kv, jnp.asarray(pos_vec),
+            jnp.asarray(mask), n_active=len(active))
+        targets = np.asarray(greedy_token(logits))  # (B, W)
+        keep_pos = np.zeros((B,), np.int32)
+        roll_mask = np.zeros((B,), bool)
+        st = self.ex.stats
+        for i in active:
+            r = self.slots[i]
+            # longest accepted draft prefix: d_{j+1} == target's greedy
+            # continuation t_j over the identical committed context
+            a = 0
+            while a < k and drafts[i, a] == targets[i, a]:
+                a += 1
+            remaining = r.max_new_tokens - len(r.generated)
+            e = min(a + 1, remaining)
+            st.spec_drafted += k
+            st.spec_accepted += e - 1  # bonus token not counted
+            for j in range(e):
+                self._advance(i, int(targets[i, j]))
+            if e < W:
+                st.spec_rollbacks += 1
+                st.spec_rolled_back_tokens += W - e
+                if self.slots[i] is not None:
+                    keep_pos[i] = pos_vec[i] + e
+                    roll_mask[i] = True
+                # a retired slot needs no rollback: paged free_slot
+                # already released its blocks; a stacked slot's stale
+                # tail is masked until the next admission overwrites it
+        if roll_mask.any():
+            self.kv = self.ex.rollback_kv(self.kv, keep_pos, roll_mask)
 
     def _decode_per_slot(self, active: List[int]):
         """Baseline: slots decode one at a time, paying the streamed-weight
@@ -524,7 +630,20 @@ class ContinuousBatcher:
             "expert_demanded": self.ex.stats.expert_demanded,
             "demanded_expert_bytes": self.ex.stats.demanded_expert_bytes,
             "resident_expert_bytes": self.ex.stats.resident_expert_bytes,
+            # speculative decoding (DESIGN.md §14): always present — all
+            # zeros when speculation is off/disabled, so dashboards need
+            # no schema branch and the gateway /metrics just forwards them
+            "spec_k": self.spec_k,
+            "spec_drafted": self.ex.stats.spec_drafted,
+            "spec_accepted": self.ex.stats.spec_accepted,
+            "accept_rate": self.ex.stats.accept_rate,
+            "spec_rollbacks": self.ex.stats.spec_rollbacks,
+            "spec_rolled_back_tokens":
+                self.ex.stats.spec_rolled_back_tokens,
+            "spec_verify_passes": self.ex.stats.spec_verify_passes,
         }
+        if self.spec is not None:
+            out["draft"] = self.spec.stats_dict()
         if self._paged:
             # paged-KV serving (DESIGN.md §12): pool residency, fault /
             # eviction traffic and prefix-cache hits for this batch

@@ -1,0 +1,94 @@
+"""Speculative decoding: the VRAM-pinned draft side (DESIGN.md §14).
+
+``SpecDecoder`` owns the draft model's executor and its stacked KV cache.
+The draft is planned wholly into VRAM by ``plan_draft_carve`` — every
+compute sub-layer pinned, nothing streamed — and runs with
+``overlap=False`` so it never touches a ``PrefetchEngine``: the target's
+scratch double-buffer is contention-free by construction, and the draft
+contributes exactly zero streamed bytes to any ledger.
+
+Per speculative iteration the decoder produces ``k`` greedy draft tokens
+for every active slot:
+
+1. a width-2 catch-up pass (the draft's own ``_run_verify``) feeding
+   ``[seq[pos-1] @ pos-1, last @ pos]`` — position ``pos-1`` covers the
+   one cache entry a FULL acceptance leaves unwritten (the last drafted
+   token was produced but never fed); for partial acceptances it
+   re-writes an already-written position with the same token over the
+   same prefix, which is bit-identical — and yields ``d_1``;
+2. ``k-1`` plain fused decode steps, each feeding ``d_i @ pos+i`` to
+   produce ``d_{i+1}``.
+
+Rejected draft tokens leave stale entries in the draft cache beyond the
+committed position; they are never attended (the decode mask stops at
+``pos``) and are overwritten before they could be, so the draft needs no
+rollback — draft correctness only moves the acceptance rate, never the
+emitted tokens.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.models.common import greedy_token
+
+
+class SpecDecoder:
+    """Draft-model runner for speculative serving (DESIGN.md §14)."""
+
+    def __init__(self, cfg, params, schedule, max_batch: int,
+                 max_seq: int):
+        # local import: executor imports planner pieces that sit beside
+        # the carve helpers importing nothing from here, but keeping the
+        # module import-light avoids a cycle through repro.core.__init__
+        from repro.core.executor import PipelinedExecutor
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.ex = PipelinedExecutor(cfg, params, schedule, max_seq=max_seq,
+                                    overlap=False, jit_engine=True,
+                                    kv_layout="stacked")
+        self.kv = self.ex.init_kv(max_batch)
+
+    def prefill_slot(self, slot: int, prompt: np.ndarray):
+        """Write the prompt into the draft's KV slot (slot-threaded
+        layer-major prefill; the draft streams nothing, so this is pure
+        pinned compute). The draft's first prediction is discarded — the
+        verify window's column 0 is always the TARGET's last token."""
+        tokens = jnp.asarray(prompt, jnp.int32)[None, :]
+        _, self.kv, _ = self.ex.prefill(tokens, kv=self.kv, slot=slot)
+
+    def draft(self, prev_tokens: np.ndarray, last_tokens: np.ndarray,
+              pos_vec: np.ndarray, active: np.ndarray, k: int,
+              n_active: int) -> np.ndarray:
+        """Produce ``k`` greedy draft tokens per slot. ``prev_tokens[b]``
+        is the committed sequence token at ``pos_vec[b] - 1`` (prompt or
+        generated), ``last_tokens[b]`` the one at ``pos_vec[b]`` whose KV
+        entry does not exist yet anywhere. Returns an (B, k) int array;
+        rows of inactive slots are meaningless and never read."""
+        catch_up = np.stack([prev_tokens, last_tokens], axis=1)
+        pos2 = jnp.asarray(pos_vec, jnp.int32) - 1
+        act = jnp.asarray(active)
+        logits, self.kv = self.ex._run_verify(
+            jnp.asarray(catch_up, jnp.int32), self.kv, pos2, act,
+            n_active=n_active)
+        drafts = [np.asarray(greedy_token(logits[:, 1]))]
+        cur = jnp.asarray(drafts[0][:, None], jnp.int32)
+        base = jnp.asarray(pos_vec, jnp.int32)
+        for i in range(1, k):
+            logits, self.kv = self.ex._run_decode(
+                cur, self.kv, base + i, act, n_active=n_active)
+            nxt = np.asarray(greedy_token(logits[:, -1]))
+            drafts.append(nxt)
+            cur = jnp.asarray(nxt[:, None], jnp.int32)
+        return np.stack(drafts, axis=1).astype(np.int32)
+
+    def stats_dict(self) -> dict:
+        """Draft-side counters (all streamed-byte entries must stay 0 —
+        the draft is wholly pinned; asserted by tests/bench)."""
+        return {
+            "streamed_bytes": self.ex.stats.streamed_bytes,
+            "decode_passes": self.ex.stats.decode_passes,
+            "verify_passes": self.ex.stats.spec_verify_passes,
+            "prefill_passes": self.ex.stats.prefill_passes,
+        }

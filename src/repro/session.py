@@ -35,9 +35,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (SYSTEMS, InferenceSetting, PipelinedExecutor,
-                        Schedule, ScheduleDiff, SystemConfig, TimingEstimator,
-                        build_graph, build_schedule, estimate_tps,
-                        estimate_ttft, run_install)
+                        Schedule, ScheduleDiff, SpecDecoder, SystemConfig,
+                        TimingEstimator, build_graph, build_schedule,
+                        choose_spec_k, estimate_spec_tps, estimate_tps,
+                        estimate_ttft, plan_draft_carve, run_install)
 from repro.core.costmodel import kv_block_bytes
 from repro.core.kvpaged import PAGE_SIZE
 from repro.core.planner import TIERS
@@ -59,7 +60,9 @@ class Session:
                  prefill_mode: Optional[str] = None,
                  kv_layout: Optional[str] = None,
                  kv_page_size: Optional[int] = None,
-                 kv_pool_pages: Optional[int] = None):
+                 kv_pool_pages: Optional[int] = None,
+                 draft_cfg=None, draft_params=None, spec_k: int = 0,
+                 sampling: str = "greedy"):
         self.cfg = cfg
         self.system = system
         self.setting = setting
@@ -91,6 +94,47 @@ class Session:
         self.kv_layout = kv_layout or "stacked"
         self.kv_page_size = int(kv_page_size) if kv_page_size else None
         self.kv_pool_pages = kv_pool_pages
+        # speculative decoding (DESIGN.md §14): raise-early contracts,
+        # same pattern as the knobs above — a combination that would
+        # silently produce divergent tokens fails at open(), not at the
+        # first serve iteration
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if spec_k > 0 and sampling != "greedy":
+            raise ValueError(
+                f"spec_k={spec_k} requires greedy sampling (got "
+                f"sampling={sampling!r}): longest-prefix acceptance is "
+                "defined against the target's argmax — speculation under "
+                "a non-greedy knob would silently produce divergent "
+                "tokens")
+        if sampling != "greedy":
+            raise ValueError(f"sampling={sampling!r} is not supported "
+                             "(only 'greedy')")
+        if spec_k > 0 and draft_cfg is None:
+            raise ValueError("spec_k > 0 needs a draft model "
+                             "(Session.open(draft_cfg=...))")
+        if draft_cfg is not None:
+            if not jit_engine:
+                raise ValueError("speculative decoding requires the jitted "
+                                 "engine (jit_engine=True)")
+            if draft_cfg.vocab != cfg.vocab:
+                raise ValueError(
+                    f"draft/target vocab mismatch: draft {draft_cfg.name} "
+                    f"has vocab={draft_cfg.vocab}, target {cfg.name} has "
+                    f"vocab={cfg.vocab} — the draft's token ids would not "
+                    "mean the same strings, so acceptance would compare "
+                    "apples to oranges")
+            if draft_cfg.tokenizer is not None and cfg.tokenizer is not None \
+                    and draft_cfg.tokenizer != cfg.tokenizer:
+                raise ValueError(
+                    f"draft/target tokenizer mismatch: draft uses "
+                    f"{draft_cfg.tokenizer!r}, target uses "
+                    f"{cfg.tokenizer!r} — equal vocab sizes do not make "
+                    "the id spaces compatible across tokenizers")
+        self.sampling = sampling
+        self.draft_cfg = draft_cfg
+        self.spec_k = int(spec_k)
+        self._draft_params = draft_params
         self.db = db if db is not None else run_install(system,
                                                         quick=quick_install)
         self.est = TimingEstimator(self.db, system)
@@ -116,14 +160,28 @@ class Session:
         self.subs = build_graph(cfg, wdtype=wdtype,
                                 expert_granular=self.expert_granular,
                                 routing=routing)
+        # draft-plan budget split (DESIGN.md §14): with speculation
+        # requested, the planner first carves the draft's wholly-pinned
+        # residency out of the budget and the target plans over the
+        # remainder; infeasible (or spec_k=0) leaves the target's plan at
+        # the FULL budget — byte-for-byte what a spec-free session builds
+        self.draft_subs = build_graph(draft_cfg, wdtype=wdtype) \
+            if draft_cfg is not None else None
+        self.draft_schedule: Optional[Schedule] = None
+        self.draft_carve_bytes = 0
+        if self.spec_k > 0:
+            self.draft_schedule, self.draft_carve_bytes = plan_draft_carve(
+                budget_bytes, self.draft_subs, self.subs, self.est,
+                setting, tiers)
         self.schedule: Schedule = build_schedule(
-            budget_bytes, self.subs, self.est, setting, tiers,
-            kv_page_size=self.kv_page_size or PAGE_SIZE)
+            budget_bytes - self.draft_carve_bytes, self.subs, self.est,
+            setting, tiers, kv_page_size=self.kv_page_size or PAGE_SIZE)
         self.replan_log: List[ScheduleDiff] = []
         self._params = params
         self._executor: Optional[PipelinedExecutor] = None
         self._batcher: Optional[ContinuousBatcher] = None
         self._batcher_cfg = None   # (max_batch, fused) as requested
+        self._spec_decoder: Optional[SpecDecoder] = None
 
     # ------------------------------------------------------------ open
     @classmethod
@@ -144,6 +202,37 @@ class Session:
         if self._params is None:
             self._params = build_model(self.cfg).init(jax.random.PRNGKey(0))
         return self._params
+
+    @property
+    def draft_params(self):
+        if self._draft_params is None and self.draft_cfg is not None:
+            # a different seed than the target's on purpose: a randomly
+            # initialised draft disagrees with the target almost always,
+            # exercising the rollback path; callers wanting a high accept
+            # rate pass the target's params (self-speculation) or real
+            # draft weights explicitly
+            self._draft_params = build_model(self.draft_cfg).init(
+                jax.random.PRNGKey(1))
+        return self._draft_params
+
+    @property
+    def spec_active(self) -> bool:
+        """True when speculation is live: requested (spec_k > 0) AND the
+        current budget fits the draft wholly in VRAM (DESIGN.md §14)."""
+        return self.spec_k > 0 and self.draft_schedule is not None
+
+    def spec_decoder(self, max_batch: int) -> Optional[SpecDecoder]:
+        """The session's draft runner (built on first call when
+        speculation is live; ``None`` otherwise). The decoder survives a
+        mid-serve feasibility flip — only the batcher's ``spec_k``
+        gates whether iterations consult it."""
+        if not self.spec_active:
+            return self._spec_decoder
+        if self._spec_decoder is None:
+            self._spec_decoder = SpecDecoder(
+                self.draft_cfg, self.draft_params, self.draft_schedule,
+                max_batch=max_batch, max_seq=self.max_seq)
+        return self._spec_decoder
 
     @property
     def executor(self) -> PipelinedExecutor:
@@ -271,8 +360,16 @@ class Session:
         if setting is not None:
             self.setting = setting
         self._refresh_routing_stats()
-        new = build_schedule(self.budget_bytes, self.subs, self.est,
-                             self.setting, self.tiers,
+        # re-check draft feasibility under the new conditions (DESIGN.md
+        # §14): a shrunk budget that no longer fits the draft disables
+        # speculation — the target re-plans at the FULL budget, exactly
+        # the spec-free schedule — and a later growth re-enables it
+        if self.spec_k > 0:
+            self.draft_schedule, self.draft_carve_bytes = plan_draft_carve(
+                self.budget_bytes, self.draft_subs, self.subs, self.est,
+                self.setting, self.tiers)
+        new = build_schedule(self.budget_bytes - self.draft_carve_bytes,
+                             self.subs, self.est, self.setting, self.tiers,
                              kv_page_size=self.kv_page_size or PAGE_SIZE)
         diff = self.schedule.diff(new)
         if self._executor is not None:
@@ -282,6 +379,9 @@ class Session:
                 "executor rebind moved different bytes than Schedule.diff"
         if self._batcher is not None:
             self._batcher._bind_schedule(new)
+            self._batcher._bind_spec(
+                self.spec_decoder(self._batcher.max_batch),
+                self.spec_k if self.spec_active else 0)
         self.schedule = new
         self.replan_log.append(diff)
         return diff
@@ -305,13 +405,42 @@ class Session:
             raise ValueError("prefix_hit_frac needs kv_layout='paged' — the "
                              "stacked cache has no prefix cache")
         isl = isl if isl is not None else self.setting.context
-        return {"ttft_s": estimate_ttft(self.schedule, isl,
-                                        mode=self.effective_prefill_mode,
-                                        prefix_hit_frac=prefix_hit_frac),
-                "tps": estimate_tps(self.schedule, self.setting.batch),
-                "pinned_bytes": self.schedule.pinned_bytes,
-                "scratch_bytes": self.schedule.scratch_bytes,
-                "kv_pool_bytes": self.schedule.kv_pool_bytes}
+        out = {"ttft_s": estimate_ttft(self.schedule, isl,
+                                       mode=self.effective_prefill_mode,
+                                       prefix_hit_frac=prefix_hit_frac),
+               "tps": estimate_tps(self.schedule, self.setting.batch),
+               "pinned_bytes": self.schedule.pinned_bytes,
+               "scratch_bytes": self.schedule.scratch_bytes,
+               "kv_pool_bytes": self.schedule.kv_pool_bytes}
+        if self.spec_active:
+            # acceptance -> TPS model (DESIGN.md §14): the draft step is
+            # one pinned decode iteration of its own schedule; the
+            # observed accept rate (or the 0.7 prior before any serving)
+            # feeds the truncated-geometric expectation, and choose_spec_k
+            # reports the window the model itself would pick — k=0 when
+            # the draft cannot beat plain decode
+            batch = self.setting.batch
+            draft_step_s = self.draft_schedule.time_for_tokens(batch)
+            a = self._observed_accept_rate(default=0.7)
+            out["spec"] = {
+                "spec_k": self.spec_k,
+                "draft_carve_bytes": self.draft_carve_bytes,
+                "draft_step_s": draft_step_s,
+                "accept_rate": a,
+                "spec_tps": estimate_spec_tps(self.schedule, draft_step_s,
+                                              a, self.spec_k, batch),
+                "chosen_k": choose_spec_k(self.schedule, draft_step_s, a,
+                                          batch=batch),
+            }
+        return out
+
+    def _observed_accept_rate(self, default: float = 0.7) -> float:
+        """The executor's measured acceptance rate, or ``default`` before
+        any speculative iteration ran."""
+        if self._executor is not None \
+                and self._executor.stats.spec_drafted > 0:
+            return self._executor.stats.accept_rate
+        return default
 
     def stats(self) -> dict:
         """Lifecycle stats: planning + (if built) executor + batcher."""
@@ -322,7 +451,13 @@ class Session:
                "pinned_bytes": self.schedule.pinned_bytes,
                "scratch_bytes": self.schedule.scratch_bytes,
                "kv_layout": self.kv_layout,
-               "kv_pool_bytes": self.schedule.kv_pool_bytes}
+               "kv_pool_bytes": self.schedule.kv_pool_bytes,
+               # speculation state (DESIGN.md §14): requested window, live
+               # feasibility under the current budget, and the carve the
+               # draft's pinned residency takes out of the target's plan
+               "spec_k": self.spec_k,
+               "spec_active": self.spec_active,
+               "draft_carve_bytes": self.draft_carve_bytes}
         if self._executor is not None:
             ex = self._executor.stats
             pf = ex.prefill_stats

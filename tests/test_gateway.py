@@ -667,3 +667,65 @@ def test_gateway_rebudget_over_http(built, db):
     for r in ref:
         assert out[r.rid] == r.generated, \
             f"rid {r.rid} diverged across mid-serve rebudget"
+
+
+def test_gateway_metrics_expose_spec_counters(built, db):
+    """Satellite: ``GET /metrics`` surfaces the speculative-decode
+    counters through the serving section (spec_drafted / spec_accepted /
+    accept_rate / spec_rollbacks), they reconcile exactly with a direct
+    ``ContinuousBatcher.stats()`` snapshot and with each other
+    (``drafted == accepted + rolled_back``), and the broker's admission
+    Ledger stays untouched by speculation."""
+    cfg, _, _ = built
+    total = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+    sess = Session.open(cfg, CLI2, int(total * 1.8) + 1,
+                        InferenceSetting(batch=2, context=64),
+                        db=db, max_seq=64, draft_cfg=cfg, spec_k=3)
+    sess._draft_params = sess.params      # self-speculation: high accept
+    assert sess.spec_active
+
+    async def main():
+        gw = sess.gateway(max_queue=8, max_batch=2).start()
+        c = InprocClient(gw)
+        reqs = wave(cfg, n=3, max_new=6)
+
+        async def go(r):
+            st, _, body = await c.request(
+                "POST", "/v1/chat/completions",
+                body_for(cfg, [int(t) for t in r.prompt],
+                         max_tokens=r.max_new_tokens))
+            assert st == 200
+            return json.loads(body)["choices"][0]["token_ids"]
+
+        out = await asyncio.gather(*[go(r) for r in reqs])
+        st, _, b = await c.request("GET", "/metrics")
+        assert st == 200
+        m = json.loads(b)
+        await gw.close(drain=True)
+        return m, out
+
+    m, out = run(main())
+    assert all(len(toks) == 6 for toks in out)
+    srv = m["serving"]
+    direct = sess._batcher.stats()
+    spec_keys = ("spec_k", "spec_drafted", "spec_accepted", "accept_rate",
+                 "spec_rollbacks", "spec_rolled_back_tokens",
+                 "spec_verify_passes")
+    for k in spec_keys:
+        assert srv[k] == direct[k], (k, srv[k], direct[k])
+    assert srv["spec_k"] == 3 and srv["spec_drafted"] > 0
+    assert srv["spec_verify_passes"] > 0
+    # internal reconciliation: every drafted token is either accepted or
+    # rolled back, and the rate is exactly their quotient
+    assert srv["spec_drafted"] == \
+        srv["spec_accepted"] + srv["spec_rolled_back_tokens"]
+    assert srv["accept_rate"] == pytest.approx(
+        srv["spec_accepted"] / max(srv["spec_drafted"], 1))
+    # the wholly pinned draft streams nothing, ever
+    assert srv["draft"]["streamed_bytes"] == 0
+    # speculation is a serving-side affair: the broker ledger still
+    # reconciles and never saw a speculative entry
+    br = m["broker"]
+    assert br["reconciles"]
+    assert br["ledger"]["received"] == len(out)
+    assert br["ledger"]["completed"] == len(out)

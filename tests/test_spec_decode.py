@@ -1,0 +1,431 @@
+"""Speculative decoding conformance (DESIGN.md §14).
+
+Four layers, inside out: the multi-position verify pass as a pure
+executor primitive (``_run_verify`` must bit-match W sequential
+``_run_decode`` steps, stacked AND paged, and ``rollback_kv`` must leave
+the cache byte-identical to never having speculated — all independent of
+any draft model); the planner's draft-carve/window-choice arithmetic
+(``plan_draft_carve``, ``estimate_spec_tps``, ``choose_spec_k`` — with
+k=0 and infeasible carves degrading byte-for-byte to today's plans); the
+Session.open raise-early contracts (vocab/tokenizer mismatch, non-greedy
+sampling); and end-to-end serving bit-identity: speculative output ==
+plain fused greedy output across dense / monolithic-MoE /
+expert-granular targets, stacked and paged KV, overlap on/off, and a
+mid-serve budget rebind that flips draft feasibility."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import (CLI2, InferenceSetting, TimingEstimator, build_graph,
+                        build_schedule, run_install)
+from repro.core.executor import PipelinedExecutor
+from repro.core.planner import (choose_spec_k, estimate_spec_tps,
+                                estimate_tps, plan_draft_carve)
+from repro.core.serving import Request
+from repro.session import Session
+
+SETTING = InferenceSetting(batch=2, context=64)
+
+
+@pytest.fixture(scope="module")
+def db():
+    return run_install(CLI2, quick=True)
+
+
+def make(arch, db, budget_frac=0.2, batch=2, context=64):
+    cfg = get_smoke_config(arch)
+    from repro.models import build_model
+    params = build_model(cfg).init(jax.random.PRNGKey(0))
+    subs = build_graph(cfg, wdtype=2)
+    budget = int(sum(s.weight_bytes for s in subs) * budget_frac) + 1
+    sched = build_schedule(budget, subs, TimingEstimator(db, CLI2),
+                           InferenceSetting(batch=batch, context=context))
+    return cfg, params, sched
+
+
+def total_bytes(cfg):
+    return sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+
+
+def open_session(arch, db, frac, **kw):
+    cfg = get_smoke_config(arch)
+    kw.setdefault("max_seq", 64)
+    return Session.open(cfg, CLI2, int(total_bytes(cfg) * frac) + 1,
+                        SETTING, db=db, **kw)
+
+
+def wave(cfg, n=3, max_new=6):
+    rng = np.random.RandomState(0)
+    return [Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=6 + 3 * i)
+                    .astype(np.int32), max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def arr(x):
+    return np.asarray(x)
+
+
+# =================================================== multi-position verify
+# These run NO draft model: the verify pass is a pure decode-append
+# primitive and must be correct independent of speculation.
+def _prefilled(ex, lens, kv=None):
+    """Per-slot prefill at staggered lengths; returns (kv, pos_vec)."""
+    rng = np.random.RandomState(3)
+    kv = ex.init_kv(len(lens)) if kv is None else kv
+    for s, T in enumerate(lens):
+        prompt = rng.randint(0, ex.cfg.vocab, size=(1, T)).astype(np.int32)
+        _, kv, _ = ex.prefill(jnp.asarray(prompt), kv=kv, slot=s)
+    return kv, np.asarray(lens, np.int32)
+
+
+def _copy_kv(kv):
+    return {"k": kv["k"], "v": kv["v"]}  # jnp arrays are immutable
+
+
+@pytest.mark.parametrize("kv_layout", ["stacked", "paged"])
+def test_verify_bitmatches_sequential_decode(db, kv_layout):
+    """One W-wide verify pass == W sequential fused decode steps, bit for
+    bit: every position's logits row AND the final cache state. Staggered
+    slot positions exercise the per-row base-position handling."""
+    cfg, params, sched = make("yi-9b", db)
+    W = 4
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=64,
+                           jit_engine=True, kv_layout=kv_layout)
+    lens = [6, 9]
+    act = jnp.asarray([True, True])
+    rng = np.random.RandomState(7)
+    tokens = rng.randint(0, cfg.vocab, size=(2, W)).astype(np.int32)
+
+    kv_seq, pos = _prefilled(ex, lens)
+    base = jnp.asarray(pos)
+    seq_logits = []
+    for j in range(W):
+        lg, kv_seq = ex._run_decode(jnp.asarray(tokens[:, j:j + 1]),
+                                    kv_seq, base + j, act, n_active=2)
+        seq_logits.append(arr(lg[:, -1]))
+
+    # fresh prefill into a second cache: deterministic, so its state is
+    # bitwise the sequential run's pre-decode state
+    ex2 = PipelinedExecutor(cfg, params, sched, max_seq=64,
+                            jit_engine=True, kv_layout=kv_layout)
+    kv_ver, _ = _prefilled(ex2, lens)
+    vlog, kv_ver = ex2._run_verify(jnp.asarray(tokens), kv_ver, base, act,
+                                   n_active=2)
+    for j in range(W):
+        assert np.array_equal(arr(vlog[:, j]), seq_logits[j]), \
+            f"verify logits diverge from sequential decode at column {j}"
+    if kv_layout == "stacked":
+        assert np.array_equal(arr(kv_seq["k"]), arr(kv_ver["k"]))
+        assert np.array_equal(arr(kv_seq["v"]), arr(kv_ver["v"]))
+    else:
+        # same continuation => same cache: decode once more on both
+        nxt = jnp.asarray(tokens[:, :1])
+        a, _ = ex._run_decode(nxt, kv_seq, base + W, act, n_active=2)
+        b, _ = ex2._run_decode(nxt, kv_ver, base + W, act, n_active=2)
+        assert np.array_equal(arr(a), arr(b))
+
+
+def test_rollback_stacked_byte_identical_to_never_written(db):
+    """After a W-wide verify pass, rolling back to ``pos + e`` leaves the
+    stacked cache BYTE-identical to a cache that sequentially decoded
+    only ``e`` tokens — including e=0 (identical to never speculating)."""
+    cfg, params, sched = make("yi-9b", db)
+    W = 4
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=64, jit_engine=True)
+    act = jnp.asarray([True, True])
+    rng = np.random.RandomState(11)
+    tokens = rng.randint(0, cfg.vocab, size=(2, W)).astype(np.int32)
+    for e in (0, 2):
+        kv_ref, pos = _prefilled(ex, [6, 9])
+        base = jnp.asarray(pos)
+        for j in range(e):
+            _, kv_ref = ex._run_decode(jnp.asarray(tokens[:, j:j + 1]),
+                                       kv_ref, base + j, act, n_active=2)
+        kv_v, _ = _prefilled(ex, [6, 9])
+        _, kv_v = ex._run_verify(jnp.asarray(tokens), kv_v, base, act,
+                                 n_active=2)
+        kv_v = ex.rollback_kv(kv_v, pos + e, np.array([True, True]))
+        assert np.array_equal(arr(kv_ref["k"]), arr(kv_v["k"])), f"e={e}"
+        assert np.array_equal(arr(kv_ref["v"]), arr(kv_v["v"])), f"e={e}"
+    assert ex.stats.spec_rollbacks == 0  # executor counter is serving-side
+    assert ex.engine.trace_counts["kv_rollback"] >= 1
+
+
+def test_rollback_paged_truncate_restores_mapping(db):
+    """Paged rollback releases every block the verify pass created past
+    the keep point (allocator returns to the sequential run's state) and
+    continued decode is bit-identical to never having speculated."""
+    cfg, params, sched = make("yi-9b", db)
+    W = 4
+    e = 1
+    ex = PipelinedExecutor(cfg, params, sched, max_seq=64,
+                           jit_engine=True, kv_layout="paged")
+    ex2 = PipelinedExecutor(cfg, params, sched, max_seq=64,
+                            jit_engine=True, kv_layout="paged")
+    act = jnp.asarray([True, True])
+    rng = np.random.RandomState(13)
+    tokens = rng.randint(0, cfg.vocab, size=(2, W)).astype(np.int32)
+
+    kv_ref, pos = _prefilled(ex, [6, 9])
+    base = jnp.asarray(pos)
+    for j in range(e):
+        _, kv_ref = ex._run_decode(jnp.asarray(tokens[:, j:j + 1]),
+                                   kv_ref, base + j, act, n_active=2)
+
+    kv_v, _ = _prefilled(ex2, [6, 9])
+    _, kv_v = ex2._run_verify(jnp.asarray(tokens), kv_v, base, act,
+                              n_active=2)
+    assert len(kv_v.alloc.free) <= len(kv_ref.alloc.free)
+    kv_v = ex2.rollback_kv(kv_v, pos + e, np.array([True, True]))
+    assert len(kv_v.alloc.free) == len(kv_ref.alloc.free), \
+        "rollback leaked (or over-freed) verify-pass blocks"
+    for j in range(e, W):           # same continuation, step by step
+        a, kv_ref = ex._run_decode(jnp.asarray(tokens[:, j:j + 1]),
+                                   kv_ref, base + j, act, n_active=2)
+        b, kv_v = ex2._run_decode(jnp.asarray(tokens[:, j:j + 1]),
+                                  kv_v, base + j, act, n_active=2)
+        assert np.array_equal(arr(a), arr(b)), \
+            f"post-rollback decode diverged at step {j}"
+
+
+def test_verify_pass_ledger_exact(db):
+    """Hard ledger on the verify pass: ``streamed_bytes`` equals the
+    tier's static plan bytes + demanded expert bytes + demanded page
+    bytes, exactly, for every pass (dense stacked AND granular paged)."""
+    for arch, kw in (("yi-9b", {}), ("qwen30b-a3b",
+                                    {"kv_layout": "paged"})):
+        cfg, params, sched = make(arch, db)
+        ex = PipelinedExecutor(cfg, params, sched, max_seq=64,
+                               jit_engine=True, **kw)
+        kv, pos = _prefilled(ex, [6, 9])
+        rng = np.random.RandomState(17)
+        tokens = rng.randint(0, cfg.vocab, size=(2, 3)).astype(np.int32)
+        _, kv = ex._run_verify(jnp.asarray(tokens), kv, jnp.asarray(pos),
+                               jnp.asarray([True, True]), n_active=2)
+        assert ex.stats.spec_verify_passes == 1
+        (entry,) = ex.stats.verify_pass_stats
+        assert entry["width"] == 3
+        assert entry["streamed_bytes"] == (entry["static_plan_bytes"]
+                                           + entry["demanded_expert_bytes"]
+                                           + entry["demanded_page_bytes"]), \
+            entry
+
+
+# =================================================== end-to-end serving
+MATRIX = [
+    # (target arch, session kwargs) — draft is qwen2-0.5b with random
+    # weights: near-zero acceptance, so every iteration exercises the
+    # reject + rollback path while the output must STILL be bit-identical
+    ("yi-9b", {}),
+    ("yi-9b", {"kv_layout": "paged", "overlap": False}),
+    ("qwen30b-a3b", {"expert_granular": False}),
+    ("qwen30b-a3b", {"kv_layout": "paged"}),   # expert-granular (auto)
+]
+
+
+@pytest.mark.parametrize("arch,kw", MATRIX,
+                         ids=["dense-stacked", "dense-paged-noovl",
+                              "moe-mono", "moe-granular-paged"])
+def test_spec_bit_identical_to_plain(db, arch, kw):
+    cfg = get_smoke_config(arch)
+    draft = get_smoke_config("qwen2-0.5b")
+    sp = open_session(arch, db, 1.5, draft_cfg=draft, spec_k=3, **kw)
+    assert sp.spec_active, "draft carve should be feasible at 1.5x"
+    a = wave(cfg)
+    sp.serve(a, max_batch=2)
+    pl = open_session(arch, db, 1.5, **kw)
+    b = wave(cfg)
+    pl.serve(b, max_batch=2)
+    for x, y in zip(a, b):
+        assert x.generated == y.generated, \
+            f"rid {x.rid}: spec {x.generated} != plain {y.generated}"
+    srv = sp.stats()["serving"]
+    assert srv["spec_verify_passes"] > 0 and srv["spec_drafted"] > 0
+    assert srv["spec_drafted"] == \
+        srv["spec_accepted"] + srv["spec_rolled_back_tokens"]
+    assert srv["draft"]["streamed_bytes"] == 0, \
+        "the pinned draft must never stream"
+
+
+def test_self_speculation_accepts_and_stats_thread(db):
+    """Draft == target (self-speculation): acceptance is structurally
+    high, and the counters thread ExecStats -> batcher.stats() ->
+    Session.stats() consistently."""
+    arch = "yi-9b"
+    cfg = get_smoke_config(arch)
+    sp = open_session(arch, db, 1.8, draft_cfg=cfg, spec_k=3)
+    sp._draft_params = sp.params
+    assert sp.spec_active and sp.draft_carve_bytes > 0
+    # max_new - 1 decode tokens divide by the window: otherwise each
+    # request's final truncated window counts its tail drafts as
+    # "rejected" and drags the measured rate below the true one
+    a = wave(cfg, max_new=9)
+    sp.serve(a, max_batch=2)
+    pl = open_session(arch, db, 1.8)
+    b = wave(cfg, max_new=9)
+    pl.serve(b, max_batch=2)
+    assert all(x.generated == y.generated for x, y in zip(a, b))
+    st = sp.stats()
+    srv = st["serving"]
+    assert st["spec_k"] == 3 and st["spec_active"]
+    assert st["draft_carve_bytes"] == sp.draft_carve_bytes
+    assert srv["accept_rate"] > 0.6       # rejections only at request end
+    assert srv["spec_accepted"] == sp._batcher.ex.stats.spec_accepted
+    assert srv["spec_verify_passes"] == \
+        sp._batcher.ex.stats.spec_verify_passes
+    for entry in sp._batcher.ex.stats.verify_pass_stats:
+        assert entry["streamed_bytes"] == (
+            entry["static_plan_bytes"] + entry["demanded_expert_bytes"]
+            + entry["demanded_page_bytes"]), entry
+    est = sp.estimates(32)["spec"]
+    assert est["spec_k"] == 3
+    assert est["draft_carve_bytes"] == sp.draft_carve_bytes
+    assert est["spec_tps"] > 0 and est["chosen_k"] >= 0
+    # after serving, the estimate uses the OBSERVED rate, not the prior
+    assert est["accept_rate"] == srv["accept_rate"]
+
+
+def test_spec_survives_midserve_rebudget(db):
+    """update_budget() mid-serve re-runs the draft carve: shrinking below
+    feasibility flips speculation OFF (plain iterations), growing back
+    re-enables it — and the tokens match an uninterrupted plain run
+    bit-for-bit throughout (the §8 invariant extended to §14)."""
+    arch = "yi-9b"
+    cfg = get_smoke_config(arch)
+    draft = get_smoke_config("qwen2-0.5b")
+    total = total_bytes(cfg)
+    sp = open_session(arch, db, 1.5, draft_cfg=draft, spec_k=3)
+    assert sp.spec_active
+    a = wave(cfg, n=3, max_new=8)
+    sp.serve(a, max_batch=2, max_iterations=2)
+    sp.update_budget(int(total * 0.3) + 1)       # draft no longer fits
+    assert not sp.spec_active
+    assert sp._batcher.spec_k == 0
+    sp.serve([], max_iterations=2)
+    sp.update_budget(int(total * 1.5) + 1)       # feasible again
+    assert sp.spec_active and sp._batcher.spec_k == 3
+    sp.serve([])
+    pl = open_session(arch, db, 1.5)
+    b = wave(cfg, n=3, max_new=8)
+    pl.serve(b, max_batch=2)
+    for x, y in zip(a, b):
+        assert x.generated == y.generated, \
+            f"rid {x.rid} diverged across the feasibility flip"
+
+
+# =================================================== degradation to today
+def plan_sig(schedule):
+    return [(t, [(p.sub.name, p.residency, p.engine, p.streamed)
+                 for p in schedule.tiers[t].plan.placements])
+            for t in sorted(schedule.tiers)]
+
+
+def test_spec_k0_and_infeasible_pick_todays_plans(db):
+    """spec_k=0 (and an infeasible draft at any k) must produce
+    byte-for-byte the same schedule and estimates as a session opened
+    with no draft at all — the machinery is a strict no-op."""
+    draft = get_smoke_config("qwen2-0.5b")
+    base = open_session("yi-9b", db, 0.2)
+    k0 = open_session("yi-9b", db, 0.2, draft_cfg=draft, spec_k=0)
+    infeasible = open_session("yi-9b", db, 0.2, draft_cfg=draft, spec_k=4)
+    assert not k0.spec_active and not infeasible.spec_active
+    assert infeasible.draft_schedule is None
+    assert infeasible.draft_carve_bytes == 0
+    for other in (k0, infeasible):
+        assert plan_sig(other.schedule) == plan_sig(base.schedule)
+        assert other.schedule.kv_pool_bytes == base.schedule.kv_pool_bytes
+    assert k0.estimates(32) == base.estimates(32)
+    # and the serve path is byte-identical too (spec_k=0 batcher)
+    a = wave(get_smoke_config("yi-9b"))
+    infeasible.serve(a, max_batch=2)
+    b = wave(get_smoke_config("yi-9b"))
+    base.serve(b, max_batch=2)
+    assert all(x.generated == y.generated for x, y in zip(a, b))
+    srv = infeasible.stats()["serving"]
+    assert srv["spec_k"] == 0 and srv["spec_verify_passes"] == 0
+
+
+# =================================================== open() contracts
+def test_contract_vocab_mismatch_raises(db):
+    draft = get_smoke_config("qwen2-0.5b").replace(vocab=512)
+    with pytest.raises(ValueError, match="vocab"):
+        open_session("yi-9b", db, 1.5, draft_cfg=draft, spec_k=2)
+
+
+def test_contract_tokenizer_mismatch_raises(db):
+    draft = get_smoke_config("qwen2-0.5b").replace(tokenizer="qwen2")
+    cfg = get_smoke_config("yi-9b").replace(tokenizer="yi")
+    with pytest.raises(ValueError, match="tokenizer"):
+        Session.open(cfg, CLI2, int(total_bytes(cfg) * 1.5) + 1, SETTING,
+                     db=db, max_seq=64, draft_cfg=draft, spec_k=2)
+    # both declaring the SAME tokenizer is fine (planning-only open)
+    s = Session.open(cfg, CLI2, int(total_bytes(cfg) * 1.5) + 1, SETTING,
+                     db=db, max_seq=64,
+                     draft_cfg=draft.replace(tokenizer="yi"), spec_k=2)
+    assert s.spec_k == 2
+
+
+def test_contract_sampling_and_k(db):
+    draft = get_smoke_config("qwen2-0.5b")
+    with pytest.raises(ValueError, match="greedy"):
+        open_session("yi-9b", db, 1.5, draft_cfg=draft, spec_k=2,
+                     sampling="topk")
+    with pytest.raises(ValueError, match="draft_cfg"):
+        open_session("yi-9b", db, 1.5, spec_k=2)
+    with pytest.raises(ValueError, match="spec_k"):
+        open_session("yi-9b", db, 1.5, draft_cfg=draft, spec_k=-1)
+    with pytest.raises(ValueError, match="jit"):
+        open_session("yi-9b", db, 1.5, draft_cfg=draft, spec_k=2,
+                     jit_engine=False)
+
+
+# =================================================== planner / costmodel
+def test_expected_accepted_tokens_math():
+    f = TimingEstimator.expected_accepted_tokens
+    assert f(0.0, 4) == 1.0                     # always the bonus token
+    assert f(1.0, 4) == 5.0                     # every draft accepted
+    assert f(0.5, 2) == pytest.approx(1.75)     # 1 + .5 + .25
+    assert f(-3.0, 2) == 1.0 and f(7.0, 2) == 3.0   # clamped
+    assert f(0.7, 0) == 1.0                     # k=0: plain decode
+
+
+def test_estimate_spec_tps_k0_is_baseline(db):
+    _, _, sched = make("yi-9b", db)
+    assert estimate_spec_tps(sched, draft_step_s=1e-3, accept_rate=0.7,
+                             k=0, batch=2) == estimate_tps(sched, 2)
+
+
+def test_choose_spec_k_degrades_and_improves(db):
+    _, _, sched = make("yi-9b", db)
+    # free + perfect draft: any k>0 beats k=0, and wider is better
+    assert choose_spec_k(sched, draft_step_s=0.0, accept_rate=1.0,
+                         k_max=4) == 4
+    # hopeless draft: never accepted -> strictly no improvement -> k=0
+    assert choose_spec_k(sched, draft_step_s=0.0, accept_rate=0.0) == 0
+    # absurdly slow draft dominates any transfer savings -> k=0
+    assert choose_spec_k(sched, draft_step_s=1e6, accept_rate=1.0) == 0
+
+
+def test_plan_draft_carve_boundaries(db):
+    cfg = get_smoke_config("yi-9b")
+    draft = get_smoke_config("qwen2-0.5b")
+    tsubs = build_graph(cfg, wdtype=2)
+    dsubs = build_graph(draft, wdtype=2)
+    est = TimingEstimator(db, CLI2)
+    total = sum(s.weight_bytes for s in tsubs)
+    sched, carve = plan_draft_carve(int(total * 1.5) + 1, dsubs, tsubs,
+                                    est, SETTING)
+    assert sched is not None and carve > 0
+    assert isinstance(carve, int)
+    # every draft compute sub is pinned; nothing streams
+    from repro.core.planner import PINNED_COMPUTE_KINDS
+    pinned = {p.sub.name for p in sched.pinned_placements()}
+    for s in dsubs:
+        if s.kind in PINNED_COMPUTE_KINDS:
+            assert s.name in pinned, f"draft sub {s.name} not pinned"
+    # a budget the carve would starve the target under -> infeasible
+    assert plan_draft_carve(carve + 1, dsubs, tsubs, est, SETTING) \
+        == (None, 0)
+    assert plan_draft_carve(0, dsubs, tsubs, est, SETTING) == (None, 0)
