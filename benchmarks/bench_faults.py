@@ -1,0 +1,140 @@
+"""Fault-injection / degradation-ladder benchmark (DESIGN.md §15).
+
+Two questions the resilience work must answer with numbers:
+
+- **What does each degradation rung cost?** Serves the same wave through
+  a clean session and through sessions forced 1, 2, ... rungs down the
+  emergency ladder (``session.degrade()``), reporting aggregate decode
+  TPS and mean TTFT per rung. Every rung hard-asserts token bit-identity
+  against the clean wave — the ladder trades throughput, never output.
+- **What does recovery cost when a fault actually fires?** Serves the
+  wave with an injected prefetch-worker crash mid-serve and reports the
+  recovery latency: the worst per-iteration stall versus the clean run's
+  mean iteration time, plus the watchdog's counters. Tokens again
+  hard-assert bit-identical.
+
+    PYTHONPATH=src python -m benchmarks.run faults
+
+``REPRO_BENCH_SMOKE=1`` shrinks the wave to a CI-sized smoke run.
+"""
+from __future__ import annotations
+
+import os
+
+# This benchmark hard-asserts token bit-identity across degradation rungs
+# (which change prefill chunking via the tier table). Pin per-op bf16
+# rounding exactly as tests/conftest.py does; must be set before the
+# first jax backend use.
+_flags = os.environ.get("XLA_FLAGS", "")
+if "xla_allow_excess_precision" not in _flags:
+    os.environ["XLA_FLAGS"] = \
+        (_flags + " --xla_allow_excess_precision=false").strip()
+
+import time  # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import get_db, write_csv  # noqa: E402
+from repro.configs import get_smoke_config  # noqa: E402
+from repro.core import CLI2, InferenceSetting, build_graph  # noqa: E402
+from repro.core.faults import (DEGRADATION_RUNGS, FaultPlan,  # noqa: E402
+                               FaultSpec, RecoveryPolicy)
+from repro.core.serving import random_requests  # noqa: E402
+from repro.session import Session  # noqa: E402
+
+
+def _open(cfg, db, total, batch, faults=None):
+    return Session.open(cfg, CLI2, int(total * 0.3) + 1,
+                        InferenceSetting(batch=batch, context=128),
+                        db=db, max_seq=128, faults=faults,
+                        recovery=RecoveryPolicy(sleep=lambda s: None))
+
+
+def _serve_timed(sess, cfg, batch, prompt_len, max_new):
+    """Serve one wave step-by-step; returns (tokens, per-iter seconds,
+    mean ttft, generated count)."""
+    reqs = random_requests(cfg.vocab, batch * 2, prompt_len, max_new,
+                           seed=7)
+    b = sess.batcher(max_batch=batch)
+    b.submit(reqs)
+    iter_s = []
+    while b.has_work:
+        t0 = time.perf_counter()
+        b.step()
+        iter_s.append(time.perf_counter() - t0)
+    ttfts = [r.ttft for r in reqs if r.ttft is not None]
+    gen = sum(len(r.generated) for r in reqs)
+    return [list(r.generated) for r in reqs], iter_s, \
+        float(np.mean(ttfts)) if ttfts else 0.0, gen
+
+
+def run():
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    batch = 2
+    max_new = 3 if smoke else 8
+    prompt_len = 8 if smoke else 16
+
+    cfg = get_smoke_config("qwen2-0.5b")
+    db = get_db("cli2")
+    total = sum(s.weight_bytes for s in build_graph(cfg, wdtype=2))
+
+    # ---------------------------------------------------------- clean
+    clean = _open(cfg, db, total, batch)
+    _serve_timed(clean, cfg, batch, prompt_len, 2)    # warm executables
+    ref, clean_iter_s, clean_ttft, gen = _serve_timed(
+        clean, cfg, batch, prompt_len, max_new)
+    clean_tps = gen / max(sum(clean_iter_s), 1e-12)
+    rows = [["full", 0, f"{clean_tps:.2f}", f"{clean_ttft * 1e3:.2f}"]]
+    print(f"faults,rung=full,tps,{clean_tps:.2f},ttft_ms,"
+          f"{clean_ttft * 1e3:.2f}")
+
+    # ---------------------------------------------------------- ladder
+    # force the session N rungs down BEFORE serving; each applicable rung
+    # gets its own fresh session so the costs don't compound across rows
+    n_applicable = 0
+    probe = _open(cfg, db, total, batch)
+    while probe.degrade(reason="bench probe") is not None:
+        n_applicable += 1
+    for n in range(1, n_applicable + 1):
+        sess = _open(cfg, db, total, batch)
+        level = None
+        for _ in range(n):
+            level = sess.degrade(reason="bench forced")
+        rung = DEGRADATION_RUNGS[level]
+        _serve_timed(sess, cfg, batch, prompt_len, 2)  # warm post-replan
+        got, iter_s, ttft, gen = _serve_timed(sess, cfg, batch,
+                                              prompt_len, max_new)
+        assert got == ref, \
+            f"rung {rung} changed tokens — the ladder must be bit-safe"
+        tps = gen / max(sum(iter_s), 1e-12)
+        rows.append([rung, level, f"{tps:.2f}", f"{ttft * 1e3:.2f}"])
+        print(f"faults,rung={rung},tps,{tps:.2f},ttft_ms,"
+              f"{ttft * 1e3:.2f}")
+
+    # ---------------------------------------------------------- recovery
+    # a prefetch-worker crash mid-serve: the watchdog flips the executor
+    # to the sync path; the stall is the worst iteration vs clean mean
+    sess = _open(cfg, db, total, batch, faults=FaultPlan(
+        [FaultSpec("prefetch.worker", "crash", after=1)]))
+    _serve_timed(sess, cfg, batch, prompt_len, 2)      # warm executables
+    got, iter_s, _, gen = _serve_timed(sess, cfg, batch, prompt_len,
+                                       max_new)
+    assert got == ref, "worker-crash recovery changed tokens"
+    deg = sess.stats()["degradation"]
+    assert deg["worker_crashes"] >= 1 and deg["degraded_sync"], \
+        "crash was injected but the watchdog never tripped"
+    clean_mean = float(np.mean(clean_iter_s))
+    recovery_ms = max(0.0, (max(iter_s) - clean_mean) * 1e3)
+    tps = gen / max(sum(iter_s), 1e-12)
+    print(f"faults,worker_crash,recovery_latency_ms,{recovery_ms:.2f},"
+          f"tps,{tps:.2f},sync_fallbacks,{deg['sync_fallbacks']}")
+    rows.append(["worker_crash", deg["level"], f"{tps:.2f}",
+                 f"{recovery_ms:.2f}"])
+
+    path = write_csv("bench_faults.csv", rows,
+                     ["rung", "level", "tps", "ttft_or_recovery_ms"])
+    print(f"faults,csv,{path}")
+
+
+if __name__ == "__main__":
+    run()

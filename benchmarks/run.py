@@ -21,13 +21,13 @@ import os
 import sys
 import time
 
-from benchmarks import (bench_figure2, bench_figure3, bench_figure4,
-                        bench_figure5, bench_figure6, bench_gateway,
-                        bench_kv_paged, bench_moe_experts, bench_oracle,
-                        bench_overlap, bench_prefill, bench_quant_stream,
-                        bench_rebudget, bench_serving, bench_spec_decode,
-                        bench_table4, bench_table5, bench_table8,
-                        bench_table9, roofline)
+from benchmarks import (bench_faults, bench_figure2, bench_figure3,
+                        bench_figure4, bench_figure5, bench_figure6,
+                        bench_gateway, bench_kv_paged, bench_moe_experts,
+                        bench_oracle, bench_overlap, bench_prefill,
+                        bench_quant_stream, bench_rebudget, bench_serving,
+                        bench_spec_decode, bench_table4, bench_table5,
+                        bench_table8, bench_table9, roofline)
 from benchmarks.common import RESULTS
 
 SUITES = {
@@ -40,6 +40,7 @@ SUITES = {
     "quant_stream": bench_quant_stream.run,
     "kv_paged": bench_kv_paged.run,
     "spec_decode": bench_spec_decode.run,
+    "faults": bench_faults.run,
     "table4": bench_table4.run,
     "table5": bench_table5.run,
     "figure2": bench_figure2.run,

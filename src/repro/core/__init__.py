@@ -2,6 +2,10 @@
 from repro.core.costmodel import Placement, Plan, TimingEstimator  # noqa: F401
 from repro.core.engine import SubLayerEngine  # noqa: F401
 from repro.core.executor import ExecStats, PipelinedExecutor  # noqa: F401
+from repro.core.faults import (  # noqa: F401
+    DEGRADATION_RUNGS, AllocationFault, DemandTimeout, FaultError,
+    FaultPlan, FaultSpec, RecoveryPolicy, TransferFault, WorkerCrash,
+    WorkerLost)
 from repro.core.graphing import (  # noqa: F401
     ShardDiv, build_graph, expert_weight_bytes, ffn_weight_bytes)
 from repro.core.install import run_install  # noqa: F401

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 
 from repro.core.costmodel import Placement
 from repro.core.engine import SubLayerEngine
+from repro.core.faults import (DemandTimeout, FaultPlan, RecoveryPolicy,
+                               WorkerLost)
 from repro.core.kvpaged import NULL_PAGE, PAGE_SIZE, PagedKVCache
 from repro.core.planner import Schedule
 from repro.core.prefetch import PrefetchEngine
@@ -94,6 +96,17 @@ class ExecStats:
     # per verify pass: streamed/static/expert/page byte split for the
     # hard-ledger assertion streamed == static + experts + pages
     verify_pass_stats: list = field(default_factory=list)
+    # fault recovery (DESIGN.md §15): retries/failures mirror the prefetch
+    # engine's counters; sync_fallbacks are shards the pass fetched itself
+    # after a stage failure or demand deadline; degraded_sync flips when
+    # the worker watchdog parks the executor on the overlap=False path
+    fault_copy_retries: int = 0
+    fault_copy_failures: int = 0
+    fault_worker_crashes: int = 0
+    fault_demand_timeouts: int = 0
+    fault_sync_fallbacks: int = 0
+    fault_alloc_failures: int = 0
+    degraded_sync: bool = False
 
     @property
     def accept_rate(self) -> float:
@@ -129,7 +142,9 @@ class PipelinedExecutor:
                  prefill_mode: str | None = None,
                  kv_layout: str = "stacked",
                  kv_page_size: int | None = None,
-                 kv_pool_pages: int | None = None):
+                 kv_pool_pages: int | None = None,
+                 faults: FaultPlan | None = None,
+                 recovery: RecoveryPolicy | None = None):
         assert cfg.family in ("dense", "moe"), \
             "executor demo covers the dense/moe families"
         self.cfg = cfg
@@ -166,6 +181,11 @@ class PipelinedExecutor:
         self.sched_slack_s: float | None = None
         self.policy = NoPolicy()
         self.stats = ExecStats()
+        # fault injection + recovery (DESIGN.md §15): `faults` is the
+        # opt-in chaos plan (None == every check compiles to a no-op
+        # branch); `recovery` is always on
+        self.faults = faults
+        self.recovery = recovery if recovery is not None else RecoveryPolicy()
         self._sync_exposed = 0.0
         self._sync_staged = 0
         # split params into per-sublayer host copies ("sysRAM")
@@ -195,7 +215,9 @@ class PipelinedExecutor:
             self._pinned_kinds[pl.sub.name] = pl.sub.kind
         self._pinned_names = set(self._pinned)
         self.engine = SubLayerEngine(cfg, self.policy) if jit_engine else None
-        self.prefetch = PrefetchEngine(self._subtree) if overlap else None
+        self.prefetch = PrefetchEngine(self._subtree, faults=faults,
+                                       recovery=self.recovery) \
+            if overlap else None
         self._layer_ids = [jnp.asarray(i, jnp.int32)
                            for i in range(cfg.n_layers)]
         # expert-granular MoE (DESIGN.md §9): the schedule's graph splits
@@ -347,9 +369,82 @@ class PipelinedExecutor:
         if name in self._pinned_names:
             return self._pinned[name], False
         if name in streaming:
+            # accounting happens BEFORE the acquire, so the recovery
+            # fallback below must move the bytes WITHOUT re-accounting
             self._account_streamed(placement)
-            return self.prefetch.acquire(name), True
+            try:
+                return self.prefetch.acquire(name), True
+            except Exception as e:
+                self._note_stream_fault(e)
+                # drop the failed entry NOW — discard frees its scratch
+                # slot iff the worker held one, so the rest of the pass's
+                # staging never wedges behind a dead slot
+                self.prefetch.discard(name)
+                return self._raw_fetch(placement.sub), False
         return self._fetch_sync(placement), False
+
+    def _raw_fetch(self, sub):
+        """Recovery transfer with NO ledger accounting — used where the
+        plan-priced bytes were already (or will be) accounted by the
+        caller, so a retried shard lands in the ledger exactly once."""
+        host = self._subtree(sub)
+        tree = jax.device_put(host)
+        jax.block_until_ready(tree)
+        self._sync_staged += sum(
+            x.size * x.dtype.itemsize for x in jax.tree.leaves(host))
+        return tree
+
+    # ------------------------------------------------------------ recovery
+    def _note_stream_fault(self, exc: Exception):
+        """Count one sync-fetch recovery and trip the worker watchdog when
+        the crash budget is spent (DESIGN.md §15)."""
+        self.stats.fault_sync_fallbacks += 1
+        if isinstance(exc, DemandTimeout):
+            self.stats.fault_demand_timeouts += 1
+        if isinstance(exc, WorkerLost):
+            crashes = self.prefetch.stats.worker_crashes
+            if not self.stats.degraded_sync and \
+                    crashes >= self.recovery.crash_tolerance:
+                # worker watchdog: every later acquire of the dead pool
+                # would fail too — park the executor on the overlap=False
+                # sync path (bit-identical) from the next pass on
+                self.stats.degraded_sync = True
+
+    def _demand_timeout_s(self):
+        return self.recovery.demand_deadline_s
+
+    def _demand_acquire(self, pl):
+        """Acquire a demand-streamed shard under the per-demand deadline
+        (DESIGN.md §15). Returns ``(tree, needs_release)`` — on a timeout
+        the entry is abandoned (its slot frees when the copy lands), on a
+        stage failure it is discarded (slot freed iff the worker held
+        one); either way the shard is sync-fetched so the pass NEVER
+        deadlocks on a demand. The caller accounts the bytes exactly
+        once, after this returns."""
+        name = pl.sub.name
+        try:
+            if self.faults is not None:
+                self.faults.check("demand.timeout", key=name)
+            return self.prefetch.acquire(
+                name, timeout=self._demand_timeout_s()), True
+        except Exception as e:
+            if isinstance(e, DemandTimeout):
+                self.prefetch.abandon(name)
+            else:
+                self.prefetch.discard(name)
+            self._note_stream_fault(e)
+            return self._raw_fetch(pl.sub), False
+
+    def _check_alloc(self, where: str):
+        """Device-allocation injection point at a pass entry — BEFORE any
+        KV mutation, so the serving layer can degrade one ladder rung and
+        re-run the pass cleanly (DESIGN.md §15)."""
+        if self.faults is not None:
+            try:
+                self.faults.check("alloc.device", key=where)
+            except Exception:
+                self.stats.fault_alloc_failures += 1
+                raise
 
     def _sync_stats(self):
         self.stats.copy_s_exposed = self._sync_exposed
@@ -361,6 +456,9 @@ class PipelinedExecutor:
             self.stats.copy_s_exposed += ps.copy_s_exposed
             self.stats.staged_bytes += ps.staged_bytes
             self.stats.prefetch_slots = ps.slots
+            self.stats.fault_copy_retries = ps.copy_retries
+            self.stats.fault_copy_failures = ps.copy_failures
+            self.stats.fault_worker_crashes = ps.worker_crashes
 
     # ------------------------------------------------------------ sub-layers
     def _attn_sub(self, w, x, k, v, i, pos_arr, pos):
@@ -528,10 +626,12 @@ class PipelinedExecutor:
             name = pl.sub.name
             self.stats.engine_calls[pl.engine] += 1
             if name in requested:
-                tree = self.prefetch.acquire(name)
+                # demand acquire under deadline; recovery sync-fetches on
+                # a miss — in either branch the plan-priced bytes are
+                # accounted exactly once, right here (DESIGN.md §15)
+                tree, rel = self._demand_acquire(pl)
                 self._account_streamed(pl)
                 self.stats.demanded_expert_bytes += pl.sub.weight_bytes
-                rel = True
             else:
                 # at-use transfer (overlap disabled, or a CPU-engine
                 # placement); _fetch_sync accounts streamed/at-use
@@ -617,10 +717,11 @@ class PipelinedExecutor:
         if page_stream:
             self.prefetch.request(pls)
             for pl, bid in zip(pls, faults):
-                tree = self.prefetch.acquire(pl.sub.name)
+                tree, rel = self._demand_acquire(pl)
                 self._account_streamed(pl)
                 cache.fold(bid, tree)
-                self.prefetch.release(pl.sub.name)
+                if rel:
+                    self.prefetch.release(pl.sub.name)
         else:
             # at-use restore: overlap disabled, or a straggler evicted
             # after this pass's demand sizing; _fetch_sync accounts the
@@ -652,7 +753,10 @@ class PipelinedExecutor:
         # (DESIGN.md §9).
         order, demand_bytes = [], 0
         self._demand_active = False
-        if self.prefetch is not None:
+        # watchdog degradation (DESIGN.md §15): with a transfer worker
+        # dead, later sessions run the overlap=False sync path — every
+        # shard goes through _fetch_sync, which is bit-identical
+        if self.prefetch is not None and not self.stats.degraded_sync:
             order = [p for p in plan.static_stream_order()
                      if p.sub.name not in self._pinned_names]
             demand_bytes = max(
@@ -721,6 +825,7 @@ class PipelinedExecutor:
         VRAM. Returns (B, 1, V) logits.
         """
         cfg = self.cfg
+        self._check_alloc("chunk")
         by_name, streaming, started = self._begin_pass(
             self.schedule.pick_tier(tokens.shape[0] * tokens.shape[1]))
         try:
@@ -764,6 +869,10 @@ class PipelinedExecutor:
         """
         assert self.engine is not None, "fused decode requires the jitted " \
             "engine (jit_engine=True)"
+        # alloc check BEFORE prepare_decode touches the page table: an
+        # abort here leaves no state to unwind, so the serving ladder can
+        # simply re-run the iteration after degrading (DESIGN.md §15)
+        self._check_alloc("decode")
         paged = isinstance(kv, PagedKVCache)
         page_demand = 0
         if paged:
@@ -857,6 +966,7 @@ class PipelinedExecutor:
         """
         assert self.engine is not None, "speculative verify requires the " \
             "jitted engine (jit_engine=True)"
+        self._check_alloc("verify")
         B, W = tokens.shape
         paged = isinstance(kv, PagedKVCache)
         page_demand = 0
@@ -967,6 +1077,7 @@ class PipelinedExecutor:
             cache = PagedKVCache(cfg, batch, self.max_seq,
                                  page_size=self.kv_page_size,
                                  n_pages=n_pages)
+            cache.fault_plan = self.faults    # alloc.host injection (§15)
             cache.fold_step = self.engine.fold_page_step
             # warm the fold executable now (against the null sink): the
             # first real fault lands mid-serve and must not pay a compile —
@@ -1008,6 +1119,9 @@ class PipelinedExecutor:
             raise ValueError("prefill_mode='layer_major' requires the "
                              "jitted engine (jit_engine=True)")
         B, T = tokens.shape
+        # alloc check at the very top — before prefix_attach/prepare_*
+        # touch the page table, so an abort is clean to retry (§15)
+        self._check_alloc("prefill")
         if kv is None:
             kv = self.init_kv(B)
         paged = isinstance(kv, PagedKVCache)

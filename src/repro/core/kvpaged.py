@@ -281,6 +281,10 @@ class PagedKVCache:
         self._pass_written: List[set] = []
         # engine fold executable (set by the executor); None -> eager sets
         self.fold_step = None
+        # host/pool allocation fault injection (set by the executor,
+        # DESIGN.md §15); named fault_plan because faults() is the
+        # pass-fault list API
+        self.fault_plan = None
 
     # ------------------------------------------------------------ movement
     def _evict_cb(self, bid: int, pid: int):
@@ -415,6 +419,13 @@ class PagedKVCache:
         reads the whole prefix); blocks overlapping ``[write_from, n)``
         are write targets (allocated, COW-guarded, marked dirty).
         """
+        # alloc.host injection point (DESIGN.md §15): fires BEFORE any
+        # block is created or COW'd, so an injected allocation failure
+        # aborts the prepare with the table untouched — the serving
+        # ladder degrades a rung and re-runs the pass cleanly (a real
+        # PagePoolFull from new_block() joins the same recovery path)
+        if self.fault_plan is not None:
+            self.fault_plan.check("alloc.host", key="prepare")
         L = self.cfg.n_layers
         ps = self.page_size
         needed: List[List[int]] = [[] for _ in range(L)]

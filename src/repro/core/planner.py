@@ -302,13 +302,22 @@ def pin_by_priority(pinned_budget: int, subs: List[SubLayer],
     Within a priority class, shards with a higher routing frequency
     (``meta["hot"]``, expert shards) pin first — the hot-set selection of
     DESIGN.md §9. Non-expert sub-layers carry no ``hot`` key, so their
-    relative order is untouched (the sort is stable)."""
+    relative order is untouched (the sort is stable).
+
+    A sub-layer carrying ``meta["pin_veto"]`` is never pinned regardless
+    of budget — the emergency-rebudget ladder (DESIGN.md §15) vetoes the
+    colder half of the expert hot set to free VRAM without changing any
+    computed value: a vetoed expert is demand-streamed instead, which is
+    bit-identical by the §9 fold path."""
     order = sorted(subs,
                    key=lambda s: (s.priority, -s.meta.get("hot", 0.0),
                                   s.layer))
     pinned, remaining = set(), []
     used = 0
     for s in order:
+        if s.meta.get("pin_veto"):
+            remaining.append(s)
+            continue
         b = s.bytes_resident(setting)
         if used + b <= pinned_budget:
             pinned.add(s.name)

@@ -42,6 +42,14 @@ ahead of an earlier layer's expert demand the consumer is blocked on.
 One session (``start``/``finish``) corresponds to one pass over a chunk's
 plan; sessions are cheap (daemon threads) and keep the queues exactly in
 step with the executor's consumption order.
+
+Fault tolerance (DESIGN.md §15): stage copies retry with exponential
+backoff under ``RecoveryPolicy`` before surfacing an error; ``acquire``
+takes an optional deadline and raises ``DemandTimeout`` past it (the
+executor then ``abandon()``s the entry and sync-fetches the shard); and
+a worker thread that dies fails every pending slot of its pool with
+``WorkerLost`` instead of leaving ``wait()`` callers blocked forever —
+the executor's watchdog sees that error and degrades to the sync path.
 """
 from __future__ import annotations
 
@@ -52,6 +60,9 @@ from dataclasses import dataclass
 from typing import Callable, List, Optional
 
 import jax
+
+from repro.core.faults import (DemandTimeout, FaultPlan, RecoveryPolicy,
+                               WorkerLost)
 
 
 @dataclass
@@ -64,10 +75,15 @@ class PrefetchStats:
     demand_slots: int = 0        # realised demand-pool depth (expert shards)
     demanded_sublayers: int = 0  # shards staged through the demand queue
     demanded_pages: int = 0      # of which: paged-KV restores (kv_page)
+    copy_retries: int = 0        # stage copies retried after a failure
+    copy_failures: int = 0       # stage copies that exhausted their retries
+    worker_crashes: int = 0      # transfer threads that died (DESIGN.md §15)
+    abandoned: int = 0           # demand entries dropped past their deadline
 
 
 class _Staged:
-    __slots__ = ("event", "tree", "copy_s", "error", "pool")
+    __slots__ = ("event", "tree", "copy_s", "error", "pool", "abandoned",
+                 "holds_slot")
 
     def __init__(self, pool: str = "static"):
         self.event = threading.Event()
@@ -75,6 +91,11 @@ class _Staged:
         self.copy_s = 0.0
         self.error: Optional[BaseException] = None
         self.pool = pool
+        self.abandoned = False
+        # True once a staging worker sem.acquire()'d a scratch slot for
+        # this entry — a WorkerLost-failed entry never held one, so the
+        # discard/finish paths know whether a release is owed
+        self.holds_slot = False
 
 
 class PrefetchEngine:
@@ -85,8 +106,12 @@ class PrefetchEngine:
     hands the device tree to ``acquire`` — in FIFO order per pool.
     """
 
-    def __init__(self, fetch_host: Callable):
+    def __init__(self, fetch_host: Callable,
+                 faults: Optional[FaultPlan] = None,
+                 recovery: Optional[RecoveryPolicy] = None):
         self._fetch_host = fetch_host
+        self.faults = faults
+        self.recovery = recovery if recovery is not None else RecoveryPolicy()
         self.stats = PrefetchStats()
         self._thread: Optional[threading.Thread] = None
         self._demand_thread: Optional[threading.Thread] = None
@@ -95,7 +120,10 @@ class PrefetchEngine:
         self._demand_sem: Optional[threading.Semaphore] = None
         self._demand_q: deque = deque()
         self._demand_cv = threading.Condition()
+        self._lock = threading.Lock()  # guards _Staged event/abandoned races
         self._closed = True
+        self.worker_error: Optional[WorkerLost] = None
+        self.demand_worker_error: Optional[WorkerLost] = None
 
     @property
     def active(self) -> bool:
@@ -139,6 +167,8 @@ class PrefetchEngine:
         self._sem = threading.Semaphore(self.stats.slots)
         self._staged = {n: _Staged() for n in names}
         self._closed = False
+        self.worker_error = None
+        self.demand_worker_error = None
         if demand_bytes > 0:
             # the demand pool sizes from what the STATIC slots leave of the
             # scratch allowance (the planner reserves one demand shard on
@@ -165,39 +195,94 @@ class PrefetchEngine:
             self._thread.start()
 
     def _stage_one(self, pl, st: _Staged):
-        try:
-            t0 = time.perf_counter()
-            host = self._fetch_host(pl.sub)
-            dev = jax.device_put(host)
-            jax.block_until_ready(dev)
-            st.copy_s = time.perf_counter() - t0
-            st.tree = dev
-            self.stats.staged_bytes += sum(
-                x.size * x.dtype.itemsize for x in jax.tree.leaves(host))
-            self.stats.staged_sublayers += 1
-        except BaseException as e:  # surfaced on acquire
-            st.error = e
-        finally:
+        """Stage one shard, retrying failed copies with exponential
+        backoff (DESIGN.md §15) before surfacing the error on acquire.
+        Each attempt re-runs the whole fetch+put, so a retried transfer
+        lands exactly once in ``staged_bytes``."""
+        pol = self.recovery
+        point = "demand.copy" if st.pool == "demand" else "prefetch.copy"
+        st.holds_slot = True
+        attempt = 0
+        while True:
+            try:
+                t0 = time.perf_counter()
+                if self.faults is not None:
+                    self.faults.check(point, key=pl.sub.name)
+                host = self._fetch_host(pl.sub)
+                dev = jax.device_put(host)
+                jax.block_until_ready(dev)
+                st.copy_s = time.perf_counter() - t0
+                st.tree = dev
+                self.stats.staged_bytes += sum(
+                    x.size * x.dtype.itemsize for x in jax.tree.leaves(host))
+                self.stats.staged_sublayers += 1
+                break
+            except BaseException as e:
+                if attempt >= pol.max_copy_retries or not pol.retryable(e):
+                    st.error = e  # surfaced on acquire
+                    self.stats.copy_failures += 1
+                    break
+                self.stats.copy_retries += 1
+                pol.sleep(pol.backoff_s(attempt))
+                attempt += 1
+        with self._lock:
             st.event.set()
+            if st.abandoned:  # consumer gave up past its deadline
+                st.tree = None
+                (self._demand_sem if st.pool == "demand"
+                 else self._sem).release()
 
     def _worker(self, order):
-        for pl in order:
-            self._sem.acquire()
-            self._stage_one(pl, self._staged[pl.sub.name])
+        try:
+            for pl in order:
+                self._sem.acquire()
+                if self.faults is not None:
+                    self.faults.check("prefetch.worker", key=pl.sub.name)
+                self._stage_one(pl, self._staged[pl.sub.name])
+        except BaseException as e:
+            self._worker_died("static", e)
 
     def _demand_worker(self):
-        while True:
-            with self._demand_cv:
-                while not self._demand_q and not self._closed:
-                    self._demand_cv.wait()
-                if not self._demand_q and self._closed:
-                    return
-                pl = self._demand_q.popleft()
-            self._demand_sem.acquire()
-            self.stats.demanded_sublayers += 1
-            if pl.sub.kind == "kv_page":
-                self.stats.demanded_pages += 1
-            self._stage_one(pl, self._staged[pl.sub.name])
+        try:
+            while True:
+                with self._demand_cv:
+                    while not self._demand_q and not self._closed:
+                        self._demand_cv.wait()
+                    if not self._demand_q and self._closed:
+                        return
+                    pl = self._demand_q.popleft()
+                self._demand_sem.acquire()
+                if self.faults is not None:
+                    self.faults.check("demand.worker", key=pl.sub.name)
+                self.stats.demanded_sublayers += 1
+                if pl.sub.kind == "kv_page":
+                    self.stats.demanded_pages += 1
+                self._stage_one(pl, self._staged[pl.sub.name])
+        except BaseException as e:
+            self._worker_died("demand", e)
+
+    def _worker_died(self, pool: str, exc: BaseException):
+        """A transfer worker crashed outside the per-item staging path.
+        Fail every pending unstaged slot of its pool so blocked
+        ``acquire()``/``finish()`` callers wake with ``WorkerLost``
+        instead of hanging forever (DESIGN.md §15); the executor's
+        watchdog degrades to sync fetches at its next touchpoint. The
+        dead pool's semaphore can be over-released harmlessly — each
+        ``start()`` builds a fresh one."""
+        err = WorkerLost(f"{pool} prefetch worker died: {exc!r}")
+        err.__cause__ = exc
+        self.stats.worker_crashes += 1
+        with self._demand_cv:
+            if pool == "demand":
+                self.demand_worker_error = err
+                self._demand_q.clear()
+            else:
+                self.worker_error = err
+            with self._lock:
+                for st in self._staged.values():
+                    if st.pool == pool and not st.event.is_set():
+                        st.error = err
+                        st.event.set()
 
     # ------------------------------------------------------------ demand
     def request(self, placements: List):
@@ -212,18 +297,31 @@ class PrefetchEngine:
                 name = pl.sub.name
                 assert name not in self._staged, \
                     f"{name} already staged/requested this pass"
-                self._staged[name] = _Staged(pool="demand")
-                self._demand_q.append(pl)
+                st = _Staged(pool="demand")
+                if self.demand_worker_error is not None:
+                    # dead demand worker: fail the entry up front rather
+                    # than queueing work nobody will ever stage
+                    st.error = self.demand_worker_error
+                    st.event.set()
+                else:
+                    self._demand_q.append(pl)
+                self._staged[name] = st
             self._demand_cv.notify()
 
     # ------------------------------------------------------------ consume
-    def acquire(self, name: str):
+    def acquire(self, name: str, timeout: Optional[float] = None):
         """Block until ``name``'s weights are staged; returns the device
-        tree. The wait is the exposed copy time; the rest was hidden."""
+        tree. The wait is the exposed copy time; the rest was hidden.
+        With ``timeout``, a miss raises ``DemandTimeout`` — the caller
+        must then ``abandon(name)`` (never release) and fetch the shard
+        itself, so a wedged transfer can never deadlock the pass."""
         st = self._staged[name]
         t0 = time.perf_counter()
-        st.event.wait()
+        staged = st.event.wait(timeout)
         exposed = time.perf_counter() - t0
+        if not staged:
+            raise DemandTimeout(
+                f"{name} not staged within {timeout:.3f}s")
         if st.error is not None:
             raise st.error
         self.stats.copy_s_exposed += exposed
@@ -235,6 +333,35 @@ class PrefetchEngine:
         st = self._staged.pop(name)
         st.tree = None
         (self._demand_sem if st.pool == "demand" else self._sem).release()
+
+    def discard(self, name: str):
+        """Drop a FAILED entry whose error the consumer just consumed
+        (DESIGN.md §15): frees its scratch slot iff a staging worker
+        actually held one (copy-failure entries), never for a
+        ``WorkerLost`` entry — the dead worker held no slot for it. The
+        caller sync-fetches the shard itself; without this, a failed
+        entry would pin its slot for the rest of the pass and a
+        single-slot session would deadlock on the next acquire."""
+        with self._lock:
+            st = self._staged.pop(name)
+            st.tree = None
+            if st.holds_slot:
+                (self._demand_sem if st.pool == "demand"
+                 else self._sem).release()
+
+    def abandon(self, name: str):
+        """Drop a timed-out entry from the session (DESIGN.md §15). If
+        its copy already finished, the slot frees now; otherwise the
+        worker frees it when the copy lands — either way exactly once,
+        and the caller must not touch ``name`` again this pass."""
+        with self._lock:
+            st = self._staged.pop(name)
+            st.abandoned = True
+            self.stats.abandoned += 1
+            if st.event.is_set():
+                st.tree = None
+                (self._demand_sem if st.pool == "demand"
+                 else self._sem).release()
 
     def finish(self):
         """End the session; joins the transfer threads."""

@@ -28,7 +28,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.executor import PipelinedExecutor
-from repro.core.kvpaged import PagedKVCache
+from repro.core.faults import AllocationFault
+from repro.core.kvpaged import PagedKVCache, PagePoolFull
 from repro.core.planner import Schedule
 from repro.models.common import greedy_token
 
@@ -44,6 +45,7 @@ class Request:
     first_token_at: Optional[float] = None
     done_at: Optional[float] = None
     cancelled_at: Optional[float] = None
+    error: Optional[str] = None   # set when servicing this request failed
     pos: int = 0
 
     @property
@@ -67,11 +69,15 @@ class TokenEvent:
     incremental caller — the gateway's SSE fan-out — receives from
     ``ContinuousBatcher.step()`` instead of waiting for the batch to
     finish. ``index`` is the token's position in ``request.generated``;
-    ``done`` marks the request's final token (its slot is already free)."""
+    ``done`` marks the request's final token (its slot is already free).
+    ``error`` (DESIGN.md §15) marks a per-request failure event instead of
+    a token: ``token`` is -1, ``done`` is True, and only this rid's client
+    is affected — the other slots keep streaming."""
     rid: int
     token: int
     index: int
     done: bool
+    error: Optional[str] = None
 
 
 def random_requests(vocab: int, n: int, prompt_len: int,
@@ -172,6 +178,13 @@ class ContinuousBatcher:
         self.iterations = 0
         self.tier_log = []
         self.completed: List[Request] = []
+        # per-request error isolation + degradation ladder (DESIGN.md §15):
+        # a request whose servicing raises is failed ALONE (its client gets
+        # an error event, the other slots keep streaming); an allocation
+        # failure instead walks the owning session down the rebudget ladder
+        # and re-runs the pass — both logs stay empty on a clean serve
+        self.failed: List[Request] = []
+        self.degradations: List[dict] = []
         # per decode iteration: plan-accounted streamed weight bytes, and
         # actual host->device bytes moved (covers CPU-engine at-use fetches
         # too, which is what the per-slot baseline mostly pays at tier 1)
@@ -233,7 +246,7 @@ class ContinuousBatcher:
                 # unwritten KV cache)
                 self._validate(req)
                 self.slots[i] = req
-                self._prefill_slot(i, req)
+                self._prefill_guard(i, req)
 
     def _validate(self, req: Request):
         T = len(req.prompt)
@@ -293,6 +306,60 @@ class ContinuousBatcher:
         # recorded exactly like a decode-phase completion
         if req.done:
             self._retire(slot)
+
+    def _prefill_guard(self, slot: int, req: Request):
+        """Admission under fault protection (DESIGN.md §15). An allocation
+        failure (injected ``alloc.device``/``alloc.host`` or a real
+        ``PagePoolFull``) walks the session down the degradation ladder and
+        re-runs the prefill — after unmapping any pages the failed attempt
+        already attached, since ``prefix_attach`` asserts on remapping an
+        occupied slot. Any other exception fails THIS request only: its
+        client gets an error event and the slot frees; the other slots'
+        KV rows never moved, so their tokens are bit-identical to an
+        undisturbed run. ``ValueError`` (contract violations) still
+        propagates — misconfiguration is the operator's bug, not the
+        request's."""
+        while True:
+            try:
+                if self.ex.faults is not None:
+                    self.ex.faults.check("serving.request", key=str(req.rid))
+                self._prefill_slot(slot, req)
+                return
+            except (AllocationFault, PagePoolFull) as e:
+                if self._paged:
+                    self.kv.free_slot(slot)
+                self._degrade_or_raise(e)
+            except ValueError:
+                raise
+            except Exception as e:
+                self._fail_slot(slot, e)
+                return
+
+    def _fail_slot(self, slot: int, exc: Exception):
+        """Fail ONE in-flight request (DESIGN.md §15): record the error,
+        free the slot (and its paged blocks), and emit a terminal error
+        event so the gateway can 500 exactly this client."""
+        req = self.slots[slot]
+        req.error = str(exc) or type(exc).__name__
+        req.done_at = time.perf_counter()
+        self.failed.append(req)
+        self.slots[slot] = None
+        if self._paged:
+            self.kv.free_slot(slot)
+        self._events.append(TokenEvent(req.rid, -1, len(req.generated),
+                                       True, error=req.error))
+
+    def _degrade_or_raise(self, exc: Exception):
+        """Step the owning session one rung down the degradation ladder
+        (DESIGN.md §15) in response to an allocation failure, or re-raise
+        when there is no session / the ladder is exhausted."""
+        if self._session is None:
+            raise exc
+        level = self._session.degrade(reason=str(exc))
+        if level is None:
+            raise exc
+        self.degradations.append({"iteration": self.iterations,
+                                  "level": level, "reason": str(exc)})
 
     def _run_slot(self, slot: int, tokens, pos):
         """Runs a single-sequence chunk against the shared KV slot. The
@@ -356,7 +423,7 @@ class ContinuousBatcher:
             jnp.asarray(mask), n_active=len(active))
         nxt = np.asarray(greedy_token(logits[:, -1]))
         for i in active:
-            self._advance(i, int(nxt[i]))
+            self._advance_guard(i, int(nxt[i]))
 
     def _seq_token(self, req: Request, idx: int) -> int:
         """Committed sequence token at index ``idx``: prompt positions
@@ -427,7 +494,11 @@ class ContinuousBatcher:
             st.spec_drafted += k
             st.spec_accepted += e - 1  # bonus token not counted
             for j in range(e):
-                self._advance(i, int(targets[i, j]))
+                if self.slots[i] is None:
+                    # _advance_guard failed the slot mid-commit — the
+                    # remaining accepted tokens die with the request
+                    break
+                self._advance_guard(i, int(targets[i, j]))
             if e < W:
                 st.spec_rollbacks += 1
                 st.spec_rolled_back_tokens += W - e
@@ -455,7 +526,7 @@ class ContinuousBatcher:
             for i in active:
                 logits = self._run_slot(i, self.last_tokens[i:i + 1],
                                         self.slots[i].pos)
-                self._advance(i, int(greedy_token(logits[0, -1])))
+                self._advance_guard(i, int(greedy_token(logits[0, -1])))
             return
         pos_vec = np.zeros((self.max_batch,), np.int32)
         for i in active:
@@ -470,7 +541,24 @@ class ContinuousBatcher:
             logits, self.kv = self.ex._run_decode(
                 self.last_tokens, self.kv, pos_vec, jnp.asarray(mask),
                 n_active=1)
-            self._advance(i, int(greedy_token(logits[i, -1])))
+            self._advance_guard(i, int(greedy_token(logits[i, -1])))
+
+    def _advance_guard(self, slot: int, token: int):
+        """Per-request isolation on the decode commit path (DESIGN.md §15):
+        an exception servicing one slot's token — including an injected
+        ``serving.request`` fault keyed to its rid — fails that request
+        alone; the batched pass already ran, so the other slots commit
+        their tokens untouched. Allocation failures are NOT per-request
+        (the ladder in ``step`` handles them) and re-raise."""
+        try:
+            if self.ex.faults is not None:
+                req = self.slots[slot]
+                self.ex.faults.check("serving.request", key=str(req.rid))
+            self._advance(slot, token)
+        except (AllocationFault, PagePoolFull):
+            raise
+        except Exception as e:
+            self._fail_slot(slot, e)
 
     def _advance(self, slot: int, token: int):
         req = self.slots[slot]
@@ -508,8 +596,23 @@ class ContinuousBatcher:
         self._admit(self.pending)
         if self._queue_aware:
             self._apply_queue_hints(admitting=False)
-        self._decode_iteration()
+        while True:
+            try:
+                self._decode_iteration()
+                break
+            except (AllocationFault, PagePoolFull) as e:
+                # emergency-rebudget ladder (DESIGN.md §15): degrade one
+                # rung and re-run the iteration. The failed attempt aborted
+                # before its KV writes (alloc checks fire at pass entry),
+                # and a re-run writes the same tokens at the same
+                # positions, so the retry is bit-identical.
+                self._degrade_or_raise(e)
         self.iterations += 1
+        if self._session is not None and self.ex.stats.degraded_sync:
+            # watchdog propagation: a prefetch-worker death already flipped
+            # the executor to the sync path; let the session record the
+            # terminal ladder rung so stats()/metrics report it
+            self._session.note_executor_degraded()
         self._serve_wall_s += time.perf_counter() - t0
         return self._events
 
@@ -599,6 +702,10 @@ class ContinuousBatcher:
             # quadratic `done` list; the retire path now records these)
             "completed": len(done),
             "cancelled": len(self.cancelled),
+            # fault handling (DESIGN.md §15): per-request failures and
+            # ladder steps taken under this batcher — zero on a clean serve
+            "failed": len(self.failed),
+            "degradations": len(self.degradations),
             "generated_tokens": total_generated,
             "wall_s": self._serve_wall_s,
             "aggregate_tps": total_generated / max(self._serve_wall_s, 1e-12),

@@ -77,13 +77,15 @@ class Ticket:
 class Ledger:
     """Admission accounting the /metrics endpoint reconciles against the
     broker's live state: ``received == admitted + rejected_*`` and
-    ``admitted == completed + cancelled + queued + active`` at all times."""
+    ``admitted == completed + cancelled + failed + queued + active`` at
+    all times."""
     received: int = 0
     admitted: int = 0
     rejected_429_queue: int = 0
     rejected_429_rate: int = 0
     completed: int = 0
     cancelled: int = 0
+    failed: int = 0
     peak_queue_depth: int = 0
 
     def as_dict(self) -> dict:
@@ -192,6 +194,8 @@ class RequestBroker:
 
     # ------------------------------------------------------------ outcomes
     def complete(self, ticket: Ticket, generated_tokens: int):
+        if ticket.state in ("done", "cancelled", "failed"):
+            return                  # already terminal: keep the ledger exact
         ticket.state = "done"
         ticket.finished_at = self.clock()
         if ticket.picked_at is not None and generated_tokens > 0:
@@ -215,6 +219,22 @@ class RequestBroker:
         self.ledger.cancelled += 1
         return was
 
+    def fail(self, ticket: Ticket):
+        """Per-request servicing failure (DESIGN.md §15): the batcher
+        failed exactly this request — its slot freed, its client gets an
+        error — terminal like ``complete`` but ledgered separately so
+        /metrics can tell fault-500s from clean completions. Idempotent."""
+        if ticket.state in ("done", "cancelled", "failed"):
+            return
+        was = ticket.state
+        ticket.state = "failed"
+        ticket.finished_at = self.clock()
+        if was == "queued":
+            self.queue.remove(ticket)
+        else:
+            self.active.pop(ticket.rid, None)
+        self.ledger.failed += 1
+
     # ------------------------------------------------------------ reporting
     def reconciles(self) -> bool:
         """The ledger identity /metrics asserts (and the tests pin)."""
@@ -222,7 +242,7 @@ class RequestBroker:
         return (led.received == led.admitted + led.rejected_429_queue
                 + led.rejected_429_rate
                 and led.admitted == led.completed + led.cancelled
-                + len(self.queue) + len(self.active))
+                + led.failed + len(self.queue) + len(self.active))
 
     def stats(self) -> dict:
         return {

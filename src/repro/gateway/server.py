@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.faults import FaultPlan
 from repro.core.serving import ContinuousBatcher, Request, TokenEvent
 from repro.gateway.broker import (QueueFull, RateLimited, RequestBroker,
                                   Ticket)
@@ -74,6 +75,8 @@ class Gateway:
                  rate_limit: Optional[int] = None,
                  rate_window_s: float = 1.0, aging_s: float = 1.0,
                  queue_aware: bool = True, default_max_tokens: int = 16,
+                 drain_deadline_s: float = 30.0,
+                 faults: Optional[FaultPlan] = None,
                  clock=time.monotonic):
         if (session is None) == (batcher is None):
             raise ValueError("pass exactly one of session= or batcher=")
@@ -99,6 +102,13 @@ class Gateway:
         self._server: Optional[asyncio.AbstractServer] = None
         self._draining = False
         self._closing = False
+        # resilience knobs (DESIGN.md §15): hard drain deadline at close,
+        # pump-turn fault injection, and the poisoned-turn counter
+        self.drain_deadline_s = drain_deadline_s
+        self.faults = faults if faults is not None \
+            else (session.faults if session is not None else None)
+        self.pump_errors = 0
+        self.aborted_on_close = 0
         self.started_at = clock()
         # completed-request latency samples for /metrics percentiles
         self._ttft_samples: List[float] = []
@@ -124,14 +134,24 @@ class Gateway:
         async with self._server:
             await self._server.serve_forever()
 
-    async def close(self, drain: bool = True):
+    async def close(self, drain: bool = True,
+                    drain_deadline_s: Optional[float] = None):
         """Graceful shutdown (DESIGN.md §13): stop admitting (503), then —
         with ``drain`` — keep stepping until every admitted request has
-        finished before stopping the pump and the listener."""
+        finished, OR until the drain deadline (DESIGN.md §15): past it the
+        remaining tickets are cancelled, their slots and paged-KV blocks
+        freed, and each waiting client answered 503 + Retry-After instead
+        of hanging a shutdown forever on one slow request."""
         self._draining = True
+        deadline = self.drain_deadline_s if drain_deadline_s is None \
+            else drain_deadline_s
+        t0 = self.clock()
         if drain and self._wake is not None:
             while (self.broker.depth() or self.broker.active
                    or self.batcher.has_work):
+                if self.clock() - t0 >= deadline:
+                    self._abort_remaining()
+                    break
                 self._wake.set()
                 await asyncio.sleep(0.005)
         self._closing = True
@@ -139,9 +159,26 @@ class Gateway:
             self._wake.set()
         if self._pump_task is not None:
             await self._pump_task
+        # stragglers past the pump's last turn: apply their cancels
+        # directly — the pump is gone, and the loop thread owns the batcher
+        self._apply_cancels()
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
+
+    def _abort_remaining(self):
+        """Drain deadline expired: cancel every non-terminal ticket and
+        push a shutdown notice (-> 503 + Retry-After) to its waiting
+        handler. Slot/paged-block frees ride the normal cancel path."""
+        retry = max(1, int(round(self.broker.retry_after_s())))
+        for rid, ticket in list(self._tickets.items()):
+            if ticket.state in ("done", "cancelled", "failed"):
+                continue
+            self._cancel_ticket(ticket)
+            self.aborted_on_close += 1
+            q = self._queues.get(rid)
+            if q is not None:
+                q.put_nowait(("shutdown", retry))
 
     # ------------------------------------------------------------ pump
     def _admit_from_broker(self):
@@ -190,6 +227,16 @@ class Gateway:
             ticket = self._tickets.get(ev.rid)
             if ticket is None:            # cancelled between step and fan-out
                 continue
+            if ev.error is not None:
+                # per-request failure (DESIGN.md §15): 500 exactly this
+                # client; the batcher already freed the slot, the other
+                # slots' events in this batch dispatch normally
+                q = self._queues.get(ev.rid)
+                if q is not None:
+                    q.put_nowait(("error", ev.error))
+                self.broker.fail(ticket)
+                self._requests.pop(ev.rid, None)
+                continue
             if ticket.first_token_at is None:
                 ticket.first_token_at = now
                 self._ttft_samples.append(now - ticket.arrived_at)
@@ -213,12 +260,26 @@ class Gateway:
                         self.broker.depth(),
                         slack_s=self.broker.min_slack_s())
                 try:
+                    if self.faults is not None:
+                        self.faults.check("gateway.pump")
                     events = await loop.run_in_executor(None,
                                                         self.batcher.step)
-                except Exception as e:    # poisoned batch: fail open tickets
-                    for rid, q in list(self._queues.items()):
-                        q.put_nowait(("error", str(e)))
-                    raise
+                except Exception as e:
+                    # poisoned turn (DESIGN.md §15): fail the tickets it
+                    # was serving — 500 to those clients only — and keep
+                    # pumping; queued tickets and future submissions are
+                    # untouched
+                    self.pump_errors += 1
+                    for rid, ticket in list(self._tickets.items()):
+                        if ticket.state != "active":
+                            continue
+                        q = self._queues.get(rid)
+                        if q is not None:
+                            q.put_nowait(("error", str(e)))
+                        self.broker.fail(ticket)
+                        self._pending_cancels.append(rid)
+                    await asyncio.sleep(0)
+                    continue
                 self._dispatch(events)
                 await asyncio.sleep(0)    # let handlers flush this turn
             elif self._closing or (self._draining
@@ -254,9 +315,12 @@ class Gateway:
             "broker": self.broker.stats(),
             "ttft_p50_s": _percentile(self._ttft_samples, 0.50),
             "ttft_p99_s": _percentile(self._ttft_samples, 0.99),
+            "pump_errors": self.pump_errors,
+            "aborted_on_close": self.aborted_on_close,
             "serving": self.batcher.stats(),
         }
         if self.session is not None:
+            out["degradation"] = self.session.degradation()
             s = self.session.stats()
             s.pop("serving", None)        # already reported above
             out["session"] = s
@@ -312,9 +376,16 @@ class Gateway:
                                         f"{MAX_BODY_BYTES} bytes",
                                    code="body_too_large")
             if path == "/healthz" and method == "GET":
-                await self._respond(writer, 200, {
-                    "status": "ok", "model": self.model_ids[0],
-                    "draining": self._draining})
+                health = {"status": "ok", "model": self.model_ids[0],
+                          "draining": self._draining,
+                          "pump_errors": self.pump_errors}
+                if self.session is not None:
+                    deg = self.session.degradation()
+                    health["degradation_level"] = deg["level"]
+                    health["degradation_rung"] = deg["rung"]
+                    if deg["level"] > 0:
+                        health["status"] = "degraded"
+                await self._respond(writer, 200, health)
             elif path == "/v1/models" and method == "GET":
                 await self._respond(writer, 200, models_body(self.model_ids))
             elif path == "/metrics" and method == "GET":
@@ -429,6 +500,11 @@ class Gateway:
             if ev[0] == "error":
                 raise GatewayError(500, f"serving failed: {ev[1]}",
                                    code="internal_error")
+            if ev[0] == "shutdown":
+                raise GatewayError(
+                    503, "gateway shutdown deadline reached before this "
+                         "request finished", code="shutting_down",
+                    retry_after_s=ev[1])
             _, token, _, done = ev
             tokens.append(token)
             if done:
@@ -454,6 +530,14 @@ class Gateway:
                 # headers are gone; best effort is an error event + close
                 writer.write(format_event(
                     {"error": {"message": ev[1], "type": "api_error"}}))
+                await writer.drain()
+                return
+            if ev[0] == "shutdown":
+                writer.write(format_event(
+                    {"error": {"message": "gateway shutdown deadline "
+                                          "reached", "type": "api_error",
+                               "code": "shutting_down",
+                               "retry_after_s": ev[1]}}))
                 await writer.drain()
                 return
             _, token, index, done = ev

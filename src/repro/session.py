@@ -40,6 +40,8 @@ from repro.core import (SYSTEMS, InferenceSetting, PipelinedExecutor,
                         choose_spec_k, estimate_spec_tps, estimate_tps,
                         estimate_ttft, plan_draft_carve, run_install)
 from repro.core.costmodel import kv_block_bytes
+from repro.core.faults import (DEGRADATION_RUNGS, FaultPlan,
+                               RecoveryPolicy)
 from repro.core.kvpaged import PAGE_SIZE
 from repro.core.planner import TIERS
 from repro.core.serving import ContinuousBatcher, Request
@@ -62,7 +64,9 @@ class Session:
                  kv_page_size: Optional[int] = None,
                  kv_pool_pages: Optional[int] = None,
                  draft_cfg=None, draft_params=None, spec_k: int = 0,
-                 sampling: str = "greedy"):
+                 sampling: str = "greedy",
+                 faults: Optional[FaultPlan] = None,
+                 recovery: Optional[RecoveryPolicy] = None):
         self.cfg = cfg
         self.system = system
         self.setting = setting
@@ -177,6 +181,15 @@ class Session:
             budget_bytes - self.draft_carve_bytes, self.subs, self.est,
             setting, tiers, kv_page_size=self.kv_page_size or PAGE_SIZE)
         self.replan_log: List[ScheduleDiff] = []
+        # fault injection + graceful degradation (DESIGN.md §15): the
+        # FaultPlan threads through the executor into the prefetch/demand
+        # pools and the paged cache; the ladder state below tracks how far
+        # an emergency rebudget has walked this session down
+        self.faults = faults
+        self.recovery = recovery
+        self.degradation_level = 0
+        self.degrade_log: List[dict] = []
+        self._emergency_reserve_bytes = 0
         self._params = params
         self._executor: Optional[PipelinedExecutor] = None
         self._batcher: Optional[ContinuousBatcher] = None
@@ -247,7 +260,8 @@ class Session:
                 overlap=self.overlap, jit_engine=self.jit_engine,
                 prefill_mode=self.prefill_mode, kv_layout=self.kv_layout,
                 kv_page_size=self.kv_page_size,
-                kv_pool_pages=self._effective_kv_pool_pages())
+                kv_pool_pages=self._effective_kv_pool_pages(),
+                faults=self.faults, recovery=self.recovery)
         return self._executor
 
     def _effective_kv_pool_pages(self) -> Optional[int]:
@@ -366,9 +380,11 @@ class Session:
         # the spec-free schedule — and a later growth re-enables it
         if self.spec_k > 0:
             self.draft_schedule, self.draft_carve_bytes = plan_draft_carve(
-                self.budget_bytes, self.draft_subs, self.subs, self.est,
-                self.setting, self.tiers)
-        new = build_schedule(self.budget_bytes - self.draft_carve_bytes,
+                self.budget_bytes - self._emergency_reserve_bytes,
+                self.draft_subs, self.subs, self.est, self.setting,
+                self.tiers)
+        new = build_schedule(self.budget_bytes - self.draft_carve_bytes
+                             - self._emergency_reserve_bytes,
                              self.subs, self.est, self.setting, self.tiers,
                              kv_page_size=self.kv_page_size or PAGE_SIZE)
         diff = self.schedule.diff(new)
@@ -385,6 +401,118 @@ class Session:
         self.schedule = new
         self.replan_log.append(diff)
         return diff
+
+    # ------------------------------------------------------------ ladder
+    def degrade(self, reason: str = "") -> Optional[int]:
+        """Walk ONE applicable rung down the emergency-rebudget ladder
+        (DESIGN.md §15) in response to an allocation failure and return
+        the new level, or ``None`` when the ladder is exhausted. Rungs:
+
+          1. ``spec_off``      — drop the draft carve (spec_k -> 0)
+          2. ``expert_shrink`` — veto the colder half of the expert hot set
+          3. ``tier_down``     — truncate the tier table and hold back an
+                                 emergency VRAM reserve (budget // 4)
+          4. ``sync``          — overlap off: the prefetch slots free and
+                                 every pass runs the synchronous path
+
+        Every rung changes only residency/overlap, never a computed value,
+        so tokens stay bit-identical (the per-rung arguments live in §15).
+        Rungs that are no-ops for this session (dense model, spec already
+        off, ...) are skipped without being reported as progress."""
+        while self.degradation_level < len(DEGRADATION_RUNGS) - 1:
+            nxt = self.degradation_level + 1
+            rung = DEGRADATION_RUNGS[nxt]
+            applied = getattr(self, f"_rung_{rung}")()
+            self.degradation_level = nxt
+            if applied:
+                self.degrade_log.append({"level": nxt, "rung": rung,
+                                         "reason": reason})
+                return nxt
+        return None
+
+    def _rung_spec_off(self) -> bool:
+        if self.spec_k <= 0:
+            return False
+        # _replan only re-carves while spec_k > 0, so the draft state must
+        # be cleared here or the stale carve would keep shrinking the plan
+        self.spec_k = 0
+        self.draft_schedule = None
+        self.draft_carve_bytes = 0
+        self._replan()
+        return True
+
+    def _rung_expert_shrink(self) -> bool:
+        if not self.expert_granular:
+            return False
+        cands = sorted((s for s in self.subs if s.kind == "moe_expert"
+                        and not s.meta.get("pin_veto")),
+                       key=lambda s: s.meta.get("hot", 0.0))
+        if len(cands) < 2:
+            return False
+        for s in cands[:len(cands) // 2]:
+            s.meta["pin_veto"] = True
+        self._replan()
+        return True
+
+    def _rung_tier_down(self) -> bool:
+        ts = tuple(sorted(self.tiers))
+        cap = max(ts[0], ts[-1] // 4)
+        new = tuple(t for t in ts if t <= cap)
+        reserve = self.budget_bytes // 4
+        if new == ts and reserve <= self._emergency_reserve_bytes:
+            return False
+        self.tiers = new
+        self._emergency_reserve_bytes = max(reserve,
+                                            self._emergency_reserve_bytes)
+        self._replan()
+        return True
+
+    def _rung_sync(self) -> bool:
+        ex = self._executor
+        applied = False
+        if ex is not None:
+            if ex.prefetch is not None and not ex.stats.degraded_sync:
+                ex.stats.degraded_sync = True
+                applied = True
+        elif self.overlap:
+            applied = True
+        self.overlap = False
+        return applied
+
+    def note_executor_degraded(self):
+        """Record a watchdog-forced sync degrade (DESIGN.md §15): the
+        executor flipped itself to the synchronous path after a prefetch
+        worker death — pin the session at the terminal rung so stats()
+        and the gateway's /healthz report it. Idempotent."""
+        terminal = len(DEGRADATION_RUNGS) - 1
+        if self.degradation_level >= terminal:
+            return
+        self.degradation_level = terminal
+        self.overlap = False
+        self.degrade_log.append({"level": terminal, "rung": "sync",
+                                 "reason": "prefetch worker watchdog"})
+
+    def degradation(self) -> dict:
+        """Current ladder position + fault/recovery counters (DESIGN.md
+        §15) — what ``stats()`` embeds and the gateway's /healthz and
+        /metrics surface."""
+        out = {"level": self.degradation_level,
+               "rung": DEGRADATION_RUNGS[self.degradation_level],
+               "log": list(self.degrade_log)}
+        if self._executor is not None:
+            ex = self._executor.stats
+            out.update({
+                "copy_retries": ex.fault_copy_retries,
+                "copy_failures": ex.fault_copy_failures,
+                "worker_crashes": ex.fault_worker_crashes,
+                "demand_timeouts": ex.fault_demand_timeouts,
+                "sync_fallbacks": ex.fault_sync_fallbacks,
+                "alloc_failures": ex.fault_alloc_failures,
+                "degraded_sync": ex.degraded_sync,
+            })
+        if self.faults is not None:
+            out["injected"] = self.faults.counters()
+        return out
 
     @property
     def effective_prefill_mode(self) -> str:
@@ -505,6 +633,7 @@ class Session:
                     "page_faults": ex.page_faults,
                     "demanded_page_bytes": ex.demanded_page_bytes,
                 })
+        out["degradation"] = self.degradation()
         if self._batcher is not None:
             out["serving"] = self._batcher.stats()
         return out
